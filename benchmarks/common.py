@@ -1,0 +1,33 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_artifact(name: str, payload):
+    os.makedirs("artifacts", exist_ok=True)
+    with open(os.path.join("artifacts", name), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def load_dryrun_rows(path="artifacts/roofline.json"):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)

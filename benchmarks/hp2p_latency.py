@@ -1,0 +1,52 @@
+"""Paper Fig 7 — HP2P (communication-intensive) latency vs cluster size.
+
+The paper spreads 32 MPI ranks over 2..6 hosts and sees average latency
+rise ~10% until 4 hosts, then plateau.  TPU analogue: a fixed 8-chip
+all-reduce job spread over 2..6 hosts of a 2-pod cluster (3 hosts/pod).
+Once the spread crosses the pod boundary the ring all-reduce pays DCN —
+and a ring has exactly TWO cut edges regardless of how it is split, so
+further spreading neither helps nor hurts: the paper's plateau.
+"""
+from __future__ import annotations
+
+from repro.core import hw
+from repro.core.jobs import RooflineProfile
+
+from .common import emit, save_artifact
+
+HOSTS_PER_POD = 3
+
+
+def hp2p_step_s(hosts: int, payload: float) -> dict:
+    """Ring all-reduce latency for 8 chips spread over ``hosts`` hosts."""
+    chips = 8
+    ici_s = 2.0 * payload / (chips * hw.ICI_BW)  # ~2x payload moved
+    pod0 = min(hosts, HOSTS_PER_POD)
+    pod1 = hosts - pod0
+    if pod1 > 0:
+        # ring cut: 2 edges cross DCN; each carries the full reduced payload
+        dcn_s = 2.0 * payload / (2 * hw.DCN_BW_PER_HOST)
+    else:
+        dcn_s = 0.0
+    return {"hosts": hosts, "pods": 1 + (pod1 > 0), "ici_s": ici_s,
+            "dcn_s": dcn_s, "step_s": ici_s + dcn_s}
+
+
+def run():
+    payload = 2048e6 * 20 / 32  # paper: 2048 MB x 20 iters over 32 ranks
+    rows = [hp2p_step_s(h, payload) for h in (2, 3, 4, 5, 6)]
+    for r in rows:
+        emit(f"fig7_hp2p_hosts{r['hosts']}", r["step_s"] * 1e6,
+             f"pods={r['pods']} dcn={r['dcn_s']:.4f}s")
+    one_pod = [r for r in rows if r["pods"] == 1]
+    two_pod = [r for r in rows if r["pods"] == 2]
+    assert two_pod[0]["step_s"] > one_pod[-1]["step_s"], \
+        "crossing the pod boundary must cost latency (paper Fig 7 rise)"
+    spread_delta = abs(two_pod[-1]["step_s"] - two_pod[0]["step_s"])
+    assert spread_delta / two_pod[0]["step_s"] < 0.15, \
+        "latency must plateau once spread (paper Fig 7 plateau)"
+    save_artifact("bench_fig7.json", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Microbenchmarks of the compute layers the scheduler places (real timings
+on this host, interpret-mode kernels excluded — XLA paths only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+from repro.models.attention import decode_attention_xla, flash_attention_xla
+from repro.models.ssm import ssm_forward, ssm_init
+
+from .common import emit, timed
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    def arr(*s):
+        return jnp.asarray(rng.normal(size=s), jnp.float32)
+
+    b, h, kv, s, d = 1, 4, 2, 1024, 64
+    q, k, v = arr(b, s, h, d), arr(b, s, kv, d), arr(b, s, kv, d)
+    fa = jax.jit(lambda q, k, v: flash_attention_xla(q, k, v, causal=True,
+                                                     q_chunk=256))
+    dt, _ = timed(lambda: fa(q, k, v).block_until_ready())
+    flops = 4 * b * h * s * s * d
+    emit("flash_attention_xla_1k", dt * 1e6,
+         f"{flops / dt / 1e9:.1f} GFLOP/s host")
+
+    faw = jax.jit(lambda q, k, v: flash_attention_xla(
+        q, k, v, causal=True, window=128, q_chunk=256))
+    dtw, _ = timed(lambda: faw(q, k, v).block_until_ready())
+    emit("flash_attention_xla_1k_win128", dtw * 1e6,
+         f"windowed speedup x{dt / dtw:.2f} (sub-quadratic slicing)")
+
+    qd = arr(b, 1, h, d)
+    kc, vc = arr(b, 8192, kv, d), arr(b, 8192, kv, d)
+    da = jax.jit(lambda q, k, v: decode_attention_xla(q, k, v, 8000))
+    dtd, _ = timed(lambda: da(qd, kc, vc).block_until_ready())
+    gb = 2 * 8192 * kv * d * 4 / 1e9
+    emit("decode_attention_xla_8k", dtd * 1e6,
+         f"{gb / dtd:.2f} GB/s cache stream host")
+
+    cfg = SSMConfig(d_state=16, head_dim=16, expand=2, chunk_size=64)
+    dm = 64
+    params = ssm_init(jax.random.PRNGKey(0), dm, cfg)
+    x = arr(2, 1024, dm)
+    fs = jax.jit(lambda x: ssm_forward(params, x, dm, cfg))
+    dts, _ = timed(lambda: fs(x).block_until_ready())
+    emit("ssd_chunked_1k", dts * 1e6,
+         f"{2 * 1024 / dts / 1e6:.2f} Mtok/s host")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Paper Figs 12-13 — Spread vs MinHost per workload class.
+
+Fig 12: memory/CPU-intensive (MiniFE) — Spread wins (paper: 29% better),
+because packing shares hosts with other tenants (input-pipeline + NIC
+contention on TPU hosts; DESIGN.md §2).
+Fig 13: communication-intensive (HP2P) — MinHost wins (paper: 21% better
+average latency), because packing keeps collectives on ICI instead of DCN.
+
+Same scenario engine as the tests; we additionally report the beyond-paper
+AutoPolicy, which picks per-job placement from the roofline cost model and
+matches the better policy in both scenarios.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import ClusterSpec, JobSpec, RooflineProfile, Simulator
+
+from .common import emit, save_artifact
+
+SPEC = ClusterSpec(n_pods=2, hosts_per_pod=8)
+
+
+def _run_one(job: JobSpec, background: bool) -> float:
+    sim = Simulator(SPEC)
+    if background:
+        # fragment the cluster: 12 of 16 hosts hold a 3-chip tenant, so
+        # packing the main gang is forced to share hosts (paper's
+        # "resource contention" — here: host input pipeline + NIC)
+        for i in range(12):
+            sim.submit_at(0.0, JobSpec(f"bg{i}", "internlm2-1.8b",
+                                       "train_4k", chips=3,
+                                       policy="minhost", steps=100_000))
+    sim.submit_at(1.0, job)
+    r = sim.run(until=5e6)
+    j = r["jobs"].get(job.job_id)
+    assert j is not None, "main job must finish"
+    return j.finish_time - j.start_time
+
+
+def run():
+    results = {}
+    # ---- Fig 12: host-resource-intensive (MiniFE analogue), contended ----
+    # TPU chips have dedicated HBM; the host-level contended resources are
+    # the input pipeline (host CPU/DRAM) and the NIC (DESIGN.md §2), so the
+    # MiniFE analogue is an input-heavy training job.
+    mem_prof = RooflineProfile(flops=1e15, hbm_bytes=1e12, ici_bytes=1e10)
+    mem_job = JobSpec("minife", "llava-next-mistral-7b", "train_4k",
+                      chips=22, steps=100, profile=mem_prof)
+    for pol in ("spread", "minhost", "auto"):
+        results[f"fig12_{pol}"] = _run_one(
+            dataclasses.replace(mem_job, policy=pol), background=True)
+    gain12 = (results["fig12_minhost"] - results["fig12_spread"]) \
+        / results["fig12_minhost"]
+    emit("fig12_spread", results["fig12_spread"] * 1e6, "memory-intensive")
+    emit("fig12_minhost", results["fig12_minhost"] * 1e6, "memory-intensive")
+    emit("fig12_gain", gain12 * 1e6,
+         f"Spread better by {gain12 * 100:.0f}% (paper: 29%)")
+    assert gain12 > 0.10, "Spread must win for memory-bound (paper Fig 12)"
+
+    # ---- Fig 13: communication-intensive (HP2P analogue) ------------------
+    comm_prof = RooflineProfile(flops=1e13, hbm_bytes=1e12, ici_bytes=8e12)
+    comm_job = JobSpec("hp2p", "qwen3-moe-235b-a22b", "train_4k", chips=32,
+                       steps=100, profile=comm_prof)
+    for pol in ("spread", "minhost", "auto"):
+        results[f"fig13_{pol}"] = _run_one(
+            dataclasses.replace(comm_job, policy=pol), background=False)
+    gain13 = (results["fig13_spread"] - results["fig13_minhost"]) \
+        / results["fig13_spread"]
+    emit("fig13_spread", results["fig13_spread"] * 1e6, "comm-intensive")
+    emit("fig13_minhost", results["fig13_minhost"] * 1e6, "comm-intensive")
+    emit("fig13_gain", gain13 * 1e6,
+         f"MinHost better by {gain13 * 100:.0f}% (paper: 21%)")
+    assert gain13 > 0.05, "MinHost must win for comm-bound (paper Fig 13)"
+
+    # ---- beyond paper: AutoPolicy matches the winner in both --------------
+    assert results["fig12_auto"] <= results["fig12_spread"] * 1.001
+    assert results["fig13_auto"] <= results["fig13_minhost"] * 1.001
+    emit("auto_policy", 0.0, "matches best policy in both scenarios")
+    save_artifact("bench_fig12_13.json",
+                  {**results, "gain12": gain12, "gain13": gain13,
+                   "paper": {"fig12": 0.29, "fig13": 0.21}})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  Each module also asserts the paper's qualitative claim (trend
+# or win direction) so `python -m benchmarks.run` doubles as a reproduction
+# gate.  Figure mapping: see DESIGN.md §6.
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (container_overhead, cosched_utilization, hp2p_latency,
+               kernel_micro, minife_scaling, policy_comparison)
+
+BENCHES = [
+    ("fig5_container_overhead", container_overhead.run),
+    ("fig6_minife_scaling", minife_scaling.run),
+    ("fig7_hp2p_latency", hp2p_latency.run),
+    ("fig8_11_cosched_utilization", cosched_utilization.run),
+    ("fig12_13_policy_comparison", policy_comparison.run),
+    ("kernel_microbench", kernel_micro.run),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in BENCHES:
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("all_benches,0.0,ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end training driver: a ~100M-param dense LM for a few hundred
+steps on synthetic Markov data, with grad accumulation, checkpointing, a
+simulated mid-run host failure, and restart-from-checkpoint — the full
+fault-tolerant flow Scylla relies on (DESIGN.md §2).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--dim 640]
+
+Default --dim 640 builds a genuine ~115M-parameter model; on this 1-core
+CPU container each step takes minutes (it is meant for a TPU host —
+the same driver runs unchanged there).  For a quick CPU pass use
+``--dim 128 --steps 30`` (~2 min, loss visibly falls).
+"""
+import argparse
+import dataclasses
+import shutil
+import time
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import LM, RuntimeKnobs
+from repro.optim import AdamWConfig
+from repro.data import MarkovSynthetic
+from repro.runtime.fault import FailureInjector, run_with_failures
+from repro.runtime.train import TrainConfig, Trainer
+
+
+def build_model(dim: int) -> LM:
+    base = get_config("internlm2-1.8b")  # same family, reduced dims
+    cfg = dataclasses.replace(
+        base, num_layers=12, d_model=dim, num_heads=8, num_kv_heads=4,
+        head_dim=dim // 8, d_ff=4 * dim, vocab_size=32768)
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params")
+    return LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32, q_chunk=128,
+                                ce_chunk=256))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dim", type=int, default=640)
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="inject a host failure at this step (0=off)")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    model = build_model(args.dim)
+    data = MarkovSynthetic(vocab_size=model.cfg.vocab_size, seq_len=256,
+                           global_batch=8, seed=0, noise=0.1)
+    tcfg = TrainConfig(
+        steps=args.steps, grad_accum=2, checkpoint_every=50,
+        checkpoint_dir=args.ckpt, log_every=10,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps))
+
+    injector = FailureInjector(
+        fail_at_steps=(args.fail_at,) if args.fail_at else ())
+
+    t0 = time.time()
+
+    def make_trainer(attempt):
+        if attempt:
+            print(f"--- restart #{attempt}: restoring from {args.ckpt}")
+        tr = Trainer(model, data, tcfg)
+
+        def log(step, metrics):
+            injector(step, metrics)
+            if step % 10 == 0:
+                print(f"step {step:4d} loss {float(metrics['loss']):.3f} "
+                      f"({(time.time() - t0):.0f}s)", flush=True)
+
+        tr._on_step = log
+        return tr
+
+    attempt = 0
+    while True:
+        tr = make_trainer(attempt)
+        try:
+            out = tr.run(on_step=tr._on_step)
+            break
+        except Exception as e:  # SimulatedHostFailure
+            print(f"!!! {e}")
+            attempt += 1
+    hist = out["history"]
+    print(f"done: step {out['step']}, loss {hist[0]['loss']:.3f} -> "
+          f"{hist[-1]['loss']:.3f}, restarts={attempt}, "
+          f"{time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from artifacts/roofline.json."""
+import json
+import sys
+
+HW_NOTE = "197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per chip; 12.5 GB/s DCN per host"
+
+
+def fmt(rows, mesh):
+    out = []
+    out.append(f"\n#### Mesh: {mesh} "
+               f"({'2x16x16 = 512 chips' if mesh == 'multipod' else '16x16 = 256 chips'})\n")
+    out.append("| arch | shape | fits 16GB | HBM GB/dev | compute s | "
+               "memory s | collective s (ici/dcn) | bottleneck | "
+               "MODEL/HLO flops | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != mesh or r.get("tag", "baseline") != "baseline":
+            continue
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"skipped: {r['skipped'][:40]} | — | — |")
+            continue
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — |"
+                       f" — | {r['error'][:40]} | — | — |")
+            continue
+        frac = max(r["compute_s"], r["memory_s"]) / max(r["step_s"], 1e-12)
+        comp_frac = r["compute_s"] / max(r["step_s"], 1e-12)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} | {r['hbm_per_dev_gb']:.1f} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} ({r['ici_s']:.2f}/{r['dcn_s']:.2f}) "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.3f} "
+            f"| {comp_frac * 100:.1f}% |")
+    return "\n".join(out)
+
+
+def main(path="artifacts/roofline.json"):
+    with open(path) as f:
+        rows = json.load(f)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    n_ok = sum(1 for r in rows if not r.get("error") and not r.get("skipped")
+               and r.get("tag", "baseline") == "baseline")
+    n_skip = sum(1 for r in rows if r.get("skipped")
+                 and r.get("tag", "baseline") == "baseline")
+    print(f"Baseline cells compiled OK: {n_ok}; skipped by design: {n_skip}; "
+          f"hardware: {HW_NOTE}.")
+    print(fmt(rows, "single"))
+    print(fmt(rows, "multipod"))
+    # non-baseline tags (perf iterations)
+    tagged = [r for r in rows if r.get("tag", "baseline") != "baseline"]
+    if tagged:
+        print("\n#### Perf-iteration cells (see §Perf)\n")
+        print("| tag | arch | shape | mesh | compute s | memory s | "
+              "collective s | step s | HBM GB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in tagged:
+            if r.get("error"):
+                continue
+            print(f"| {r['tag']} | {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                  f"| {r['collective_s']:.3f} | {r['step_s']:.3f} "
+                  f"| {r['hbm_per_dev_gb']:.1f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

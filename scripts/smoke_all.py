@@ -1,0 +1,39 @@
+"""Quick dev loop: reduced-config fwd/loss/prefill/decode for every arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import list_archs, get_config
+from repro.models import LM, RuntimeKnobs
+
+B, S = 2, 32
+
+
+def run(arch):
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.random.normal(jax.random.PRNGKey(2),
+                                            (B, S, cfg.d_model))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss), (arch, "loss NaN")
+    logits, caches = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), (arch, "prefill NaN")
+    cache0 = model.init_cache(B, S)
+    tok = batch["tokens"][:, :1]
+    logits2, cache1 = jax.jit(model.decode_step)(params, cache0, tok,
+                                                 jnp.int32(0))
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits2).all(), (arch, "decode NaN")
+    print(f"{arch:28s} OK loss={float(loss):.3f}")
+
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or list_archs()
+    for a in archs:
+        run(a)

@@ -1,0 +1,109 @@
+"""Atomic checkpoint save/restore with elastic resharding.
+
+Layout:  <dir>/step_<n>/  arrays.npz  +  meta.json
+Atomicity: write into ``<dir>/.tmp_step_<n>`` then ``os.replace`` — a
+crash mid-write never corrupts the latest checkpoint (the paper's
+fault-tolerance story requires restart-from-checkpoint to always succeed).
+
+Elastic restore: arrays are stored *unsharded* (gathered) with their tree
+paths; ``restore`` re-places them with ``jax.device_put`` against the
+shardings of the CURRENT mesh — which may have a different shape than the
+mesh that saved (host failure -> smaller gang; see runtime/fault.py).  On a
+multi-host deployment this module's np.savez becomes one shard-file per
+host plus a global index; the interface (save/restore against shardings)
+is unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state, extra: dict | None = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k: v for k, v in arrays.items()})
+    meta = {"step": step, "keys": sorted(arrays),
+            "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int | None = None):
+    """Returns (flat dict key->np.array, meta)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    npz = np.load(os.path.join(d, "arrays.npz"))
+    return {k: npz[k] for k in npz.files}, meta
+
+
+def restore(ckpt_dir: str, target, shardings=None, step: int | None = None):
+    """Restore into the structure of ``target`` (pytree of arrays or
+    ShapeDtypeStructs), placing leaves with ``shardings`` (elastic: the mesh
+    may differ from the one that saved)."""
+    flat, meta = load_checkpoint(ckpt_dir, step)
+    tpaths = jax.tree_util.tree_flatten_with_path(target)
+    leaves, treedef = jax.tree_util.tree_flatten(target)
+    spaths = (jax.tree_util.tree_flatten(shardings)[0]
+              if shardings is not None else [None] * len(leaves))
+    out = []
+    for (path, leaf), sh in zip(tpaths[0], spaths):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(tpaths[1], out), meta
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int = 3):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

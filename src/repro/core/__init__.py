@@ -1,0 +1,20 @@
+# Scylla core: Mesos-style resource brokering + policy-driven gang placement
+# of SPMD JAX jobs (the paper's contribution, adapted to TPU pods).
+from . import hw
+from .cluster import Cluster, ClusterSpec
+from .costmodel import PlacementView, analytic_profile, job_profile, step_time
+from .drf import DRFAllocator
+from .jobs import JobPhase, JobSpec, JobState, RooflineProfile
+from .policies import (AutoPolicy, MinHostPolicy, Placement, SpreadPolicy,
+                       get_policy)
+from .resources import AgentInfo, Offer, ResourceSpec
+from .scheduler import ScyllaScheduler
+from .simulator import Simulator
+
+__all__ = [
+    "hw", "Cluster", "ClusterSpec", "DRFAllocator", "JobPhase", "JobSpec",
+    "JobState", "RooflineProfile", "AutoPolicy", "MinHostPolicy",
+    "SpreadPolicy", "Placement", "get_policy", "AgentInfo", "Offer",
+    "ResourceSpec", "ScyllaScheduler", "Simulator", "PlacementView",
+    "analytic_profile", "job_profile", "step_time",
+]

@@ -1,0 +1,51 @@
+"""Dominant Resource Fairness (Ghodsi et al.) — Mesos' default allocator.
+
+The broker offers resources to the framework with the *lowest dominant
+share*; dominant share = max over resource dimensions of
+(framework's allocation / cluster total).  The paper relies on Mesos/DRF for
+multi-framework fairness; we reproduce it so multi-tenant experiments
+(benchmarks/cosched_utilization.py) carry the same semantics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .resources import ResourceSpec
+
+
+@dataclass
+class FrameworkAccount:
+    name: str
+    allocated: ResourceSpec = field(default_factory=ResourceSpec)
+
+
+class DRFAllocator:
+    def __init__(self, total: ResourceSpec):
+        self.total = total
+        self.accounts: dict[str, FrameworkAccount] = {}
+
+    def register(self, name: str) -> None:
+        self.accounts.setdefault(name, FrameworkAccount(name))
+
+    def dominant_share(self, name: str) -> float:
+        return self.accounts[name].allocated.dominant_share(self.total)
+
+    def next_framework(self, candidates=None) -> str | None:
+        """Framework with the lowest dominant share (Mesos offer order)."""
+        names = [n for n in (candidates if candidates is not None
+                             else self.accounts) if n in self.accounts]
+        if not names:
+            return None
+        return min(names, key=lambda n: (self.dominant_share(n), n))
+
+    def charge(self, name: str, res: ResourceSpec) -> None:
+        self.register(name)
+        self.accounts[name].allocated = self.accounts[name].allocated + res
+
+    def credit(self, name: str, res: ResourceSpec) -> None:
+        acct = self.accounts[name]
+        acct.allocated = acct.allocated - res
+        assert acct.allocated.nonneg(), f"negative allocation for {name}"
+
+    def set_total(self, total: ResourceSpec) -> None:
+        self.total = total

@@ -1,0 +1,102 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+Decode is memory-bound (the whole KV cache streams HBM->VMEM once); the
+kernel's job is to keep that stream dense and do the partial-softmax combine
+in VMEM.  Grid = (batch, q_heads, kv_blocks), kv innermost/sequential with a
+running (max, denom, acc) in scratch — the same online-softmax contract as
+the prefill kernel.  The current decode position arrives via scalar prefetch
+so fully-masked KV blocks issue no work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, window: int, block_k: int, scale: float):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    pos = pos_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ik * block_k
+    needed = k_start <= pos
+    if window:
+        needed = jnp.logical_and(needed, k_start + block_k - 1 > pos - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = kpos <= pos
+        if window:
+            mask &= pos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_tpu(q, k_cache, v_cache, pos, *, window=0, block_k=512,
+                         interpret=False):
+    """q (B, H, 1, D); caches (B, KV, S, D); pos scalar int32 -> (B, H, 1, D)."""
+    b, h, _, d = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    nk = s // block_k
+    scale = d ** -0.5
+    kernel = functools.partial(_decode_kernel, window=window, block_k=block_k,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik, pos_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, ik, pos_: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, ik, pos_: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h_, ik, pos_: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k_cache, v_cache)

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (training/prefill).
+
+TPU-native tiling: the (Sq, Sk) score matrix never leaves VMEM — the grid is
+(batch, q_heads, q_blocks, kv_blocks) with the kv dimension innermost and
+"arbitrary" (sequential), accumulating a running (max, denom, out) triple in
+VMEM scratch.  GQA is handled with *zero* KV replication by pointing the K/V
+BlockSpec index_map at ``q_head // group_size``.
+
+Causal and sliding-window masking skip fully-masked KV blocks via ``pl.when``
+(no MXU work is issued for them), so compiled FLOPs are ~S*window for
+windowed layers and ~S^2/2 for causal ones — matching the roofline model.
+
+Block sizes default to (512, 512) with the last dim = head_dim (128-aligned
+for the MXU); validated against ``ref.attention_ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, block_q: int, block_k: int,
+                  scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    needed = k_start <= q_start + block_q - 1 if causal else True
+    if window:
+        lo = k_start + block_k - 1 >= q_start - window + 1
+        needed = jnp.logical_and(needed, lo) if causal else lo
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal=True, window=0, block_q=512,
+                        block_k=512, interpret=False):
+    """q (B, H, Sq, D); k, v (B, KV, Sk, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = d ** -0.5
+
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+The model layer calls these with its own (B, S, H, D) layout; wrappers
+transpose to the kernels' (B, H, S, D) layout, choose interpret mode
+automatically off-TPU, and fall back to the jnp reference when a shape can't
+be tiled (tiny smoke configs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_tpu
+from .flash_attention import flash_attention_tpu
+from .ssd_scan import ssd_chunk_tpu
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,
+                    block_k=512, interpret=None):
+    """Model layout: q (B,S,H,D); k,v (B,S,KV,D) -> (B,S,H,D)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention_tpu(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out.swapaxes(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, block_k=512,
+                     interpret=None):
+    """Model layout: q (B,1,H,D); caches (B,S,KV,D) -> (B,1,H,D)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qt = q.swapaxes(1, 2)
+    kt = k_cache.swapaxes(1, 2)
+    vt = v_cache.swapaxes(1, 2)
+    out = decode_attention_tpu(qt, kt, vt, pos, window=window,
+                               block_k=block_k, interpret=interpret)
+    return out.swapaxes(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, b, c, dt, cum, *, interpret=None):
+    """SSD intra-chunk compute; shapes per ssd_chunk_tpu docstring."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return ssd_chunk_tpu(x, b, c, dt, cum, interpret=interpret)
+
+
+# jnp oracles re-exported for convenience
+attention_ref = ref.attention_ref
+decode_attention_ref = ref.decode_attention_ref
+ssd_chunk_ref = ref.ssd_chunk_ref

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These are deliberately naive: full score matrices, explicit masks, fp32
+throughout.  Tests sweep shapes/dtypes and assert the kernels (interpret
+mode on CPU) match these within dtype tolerance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q (B,H,Sq,D); k,v (B,KV,Sk,D) -> (B,H,Sq,D).  Naive full softmax."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    kx = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * d ** -0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0):
+    """q (B,H,1,D); caches (B,KV,S,D) -> (B,H,1,D)."""
+    b, h, _, d = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    kx = jnp.repeat(k_cache, g, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v_cache, g, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * d ** -0.5
+    kpos = jnp.arange(s)
+    mask = kpos <= pos
+    if window:
+        mask &= pos - kpos < window
+    sc = jnp.where(mask[None, None, None, :], sc, -1e30)
+    p = jnp.exp(sc - sc.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, b, c, dt, cum):
+    """Oracle for ssd_chunk_tpu (same shapes/contract)."""
+    bb, nc, nh, q, hp = x.shape
+    g = b.shape[2]
+    rep = nh // g
+    bx = jnp.repeat(b, rep, axis=2).astype(jnp.float32)  # (B,NC,NH,Q,ds)
+    cx = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    cb = jnp.einsum("bnhqs,bnhks->bnhqk", cx, bx)
+    decay = jnp.exp(cum[..., :, None] - cum[..., None, :])  # (B,NC,NH,Q,Q)
+    att = cb * decay * dt[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    att = jnp.where(mask, att, 0.0)
+    y = jnp.einsum("bnhqk,bnhkp->bnhqp", att,
+                   x.astype(jnp.float32)).astype(x.dtype)
+    w = jnp.exp(cum[..., -1:] - cum) * dt  # (B,NC,NH,Q)
+    st = jnp.einsum("bnhqs,bnhqp->bnhsp", bx * w[..., None],
+                    x.astype(jnp.float32))
+    return y, st

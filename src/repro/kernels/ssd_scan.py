@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk compute.
+
+The chunked SSD algorithm splits into (a) per-chunk quadratic token mixing +
+per-chunk state contribution — all MXU matmuls, done here — and (b) a tiny
+sequential inter-chunk state recurrence, left to XLA (O(nc * heads * hp * ds),
+negligible).  Grid = (batch*chunks, heads), one grid cell per (chunk, head):
+
+    att[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j   (j <= i)
+    y_intra  = att @ x                                    (Q,hp)
+    state    = (B * exp(cum_last - cum) * dt)^T @ x       (ds,hp)
+
+``dt``/``cum`` (softplus'd step and its inclusive cumsum) are precomputed in
+XLA — elementwise, fusable, and needed by the inter-chunk scan anyway.
+Mamba2 n_groups < heads is handled via the B/C index_map (no replication).
+Chunk Q=256 with hp/ds of 64..128 keeps the (Q,Q) tile and operands in VMEM
+(~1 MB/cell at bf16).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, st_ref, *,
+                chunk: int):
+    x = x_ref[0, 0]  # (Q, hp)
+    bmat = b_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    cmat = c_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    dt = dt_ref[0, 0]  # (Q, 1) f32
+    cum = cum_ref[0, 0]  # (Q, 1) f32
+
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    decay = jnp.exp(cum - cum.T)  # (Q,Q): exp(cum_i - cum_j)
+    att = cb * decay * dt.T
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(kj <= qi, att, 0.0)
+    y = jax.lax.dot_general(att.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    w = jnp.exp(cum[-1:, :] - cum) * dt  # (Q, 1)
+    bw = bmat * w  # (Q, ds)
+    st = jax.lax.dot_general(bw, x.astype(jnp.float32),
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (ds, hp)
+    st_ref[0, 0] = st
+
+
+def ssd_chunk_tpu(x, b, c, dt, cum, *, interpret=False):
+    """Per-chunk SSD intra compute.
+
+    x   (B, NC, NH, Q, hp)
+    b,c (B, NC, G,  Q, ds)   (groups indexed via head // (NH // G))
+    dt  (B, NC, NH, Q) f32   softplus'd step
+    cum (B, NC, NH, Q) f32   inclusive cumsum of dt * a
+
+    Returns: y_intra (B, NC, NH, Q, hp), state (B, NC, NH, ds, hp) f32.
+    """
+    bb, nc, nh, q, hp = x.shape
+    g, ds = b.shape[2], b.shape[4]
+    rep = nh // g
+    dt4 = dt[..., None]
+    cum4 = cum[..., None]
+    kernel = functools.partial(_ssd_kernel, chunk=q)
+    grid = (bb * nc, nh)
+    xr = x.reshape(bb * nc, nh, q, hp)
+    br = b.reshape(bb * nc, g, q, ds)
+    cr = c.reshape(bb * nc, g, q, ds)
+    dtr = dt4.reshape(bb * nc, nh, q, 1)
+    cumr = cum4.reshape(bb * nc, nh, q, 1)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, hp), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, q, ds), lambda i, h: (i, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, q, ds), lambda i, h: (i, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, hp), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, ds, hp), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb * nc, nh, q, hp), x.dtype),
+            jax.ShapeDtypeStruct((bb * nc, nh, ds, hp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, br, cr, dtr, cumr)
+    return (y.reshape(bb, nc, nh, q, hp), st.reshape(bb, nc, nh, ds, hp))

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first backend init, and the dry-run needs 512 host
+placeholder devices to build the 2x16x16 production mesh.  Nothing here
+allocates device memory — inputs are ShapeDtypeStructs and compilation is
+ahead-of-time.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out artifacts/roofline.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs, list_archs
+from repro.core import hw
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_hlo, model_flops, roofline
+from repro.models import LM, RuntimeKnobs
+from repro.optim import AdamWConfig
+from repro.runtime import (make_prefill_step, make_serve_step,
+                           make_train_step)
+from repro.runtime.steps import train_state_specs
+from repro.sharding import (batch_shardings, cache_shardings, grad_shardings,
+                            make_shard_fn, opt_state_shardings,
+                            param_shardings)
+
+# <25B: ZeRO-1 (params replicated over data, opt sharded) — avoids the
+# per-microbatch FSDP all-gather tax.  >=25B: FSDP/ZeRO-3 — the scan-VJP
+# gradient buffer lives at the *param* sharding, so only weight sharding
+# keeps fp32 grads under 16 GB/chip (measured; see EXPERIMENTS.md §Dry-run).
+FSDP_THRESHOLD = 25e9
+
+# Per-arch knob overrides for the baseline dry-run, memory-driven (see
+# EXPERIMENTS.md §Dry-run).  qwen2.5's 40 heads don't divide the 16-way
+# model axis, so its attention activations are per-device fat — smaller
+# microbatches + tighter attention/CE chunks keep it under 16 GB.
+ARCH_OVERRIDES = {
+    "qwen2.5-32b": {"grad_accum": 16, "q_chunk": 256, "ce_chunk": 512},
+}
+
+
+def _cast_specs(specs, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+        if s.dtype == jnp.float32 else s, specs)
+
+
+def _dp_size(mesh):
+    out = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            out *= mesh.shape[a]
+    return out
+
+
+def build_knobs(cfg, mesh, args) -> RuntimeKnobs:
+    return RuntimeKnobs(
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        cache_dtype=jnp.bfloat16, q_chunk=args.q_chunk,
+        ce_chunk=args.ce_chunk, remat=not args.no_remat,
+        causal_skip=getattr(args, "causal_skip", False),
+        shard_fn=make_shard_fn(mesh, cfg, sp=getattr(args, "sp", False),
+                               layout=getattr(args, "layout", "tp")))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, args):
+    """Returns (lowered, meta) for one (arch, shape, mesh) cell."""
+    import argparse as _ap
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    ov = ARCH_OVERRIDES.get(arch, {})
+    if ov and getattr(args, "tag", "baseline") == "baseline":
+        d = vars(args).copy()
+        d.update(ov)
+        args = _ap.Namespace(**d)
+    layout = getattr(args, "layout", "tp")
+    knobs = build_knobs(cfg, mesh, args)
+    model = LM(cfg, knobs)
+    fsdp = cfg.param_count() > FSDP_THRESHOLD
+    pspecs = model.param_specs()
+    bspecs = input_specs(cfg, sh)
+    b_sh = batch_shardings(mesh, bspecs, layout=layout)
+    meta = {"fsdp": fsdp, "grad_accum": 1}
+
+    huge = cfg.param_count() > 100e9
+    if sh.kind == "train":
+        grad_accum = args.grad_accum
+        if grad_accum <= 0:
+            grad_accum = (32 if huge else 8) if sh.global_batch >= 64 else 1
+        grad_accum = min(grad_accum, sh.global_batch // _dp_size(mesh)) or 1
+        meta["grad_accum"] = grad_accum
+        # >100B params: bf16 Adam moments + bf16 grad accumulators
+        # (optimizer/grad HBM halves; update math stays fp32 — DESIGN.md §5)
+        moments_dtype = jnp.bfloat16 if huge else jnp.float32
+        accum_dtype = (jnp.bfloat16 if (huge or getattr(args, "accum_bf16",
+                                                        False))
+                       else jnp.float32)
+        meta["moments_dtype"] = str(jnp.dtype(moments_dtype))
+        state_specs = train_state_specs(model, moments_dtype)
+        p_sh = param_shardings(mesh, cfg, state_specs["params"], fsdp=fsdp,
+                               layout=layout)
+        o_leaf = opt_state_shardings(mesh, cfg, state_specs["params"],
+                                     fsdp=fsdp, layout=layout)
+        state_sh = {"params": p_sh,
+                    "opt": {"master": o_leaf, "mu": o_leaf, "nu": o_leaf,
+                            "step": NamedSharding(mesh, P())}}
+        g_sh = grad_shardings(mesh, cfg, state_specs["params"])
+        step = make_train_step(model, AdamWConfig(), grad_accum,
+                               accum_dtype=accum_dtype,
+                               grad_shardings=g_sh)  # ZeRO-2 over data only
+        jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state_specs, bspecs)
+        return lowered, meta
+
+    p_specs_bf16 = _cast_specs(pspecs, jnp.bfloat16)
+    p_sh = param_shardings(mesh, cfg, p_specs_bf16, fsdp=fsdp, layout=layout)
+    if sh.kind == "prefill":
+        step = make_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        with mesh:
+            lowered = jitted.lower(p_specs_bf16, bspecs)
+        return lowered, meta
+
+    # decode: one token against a seq_len cache
+    c_specs = model.cache_specs(sh.global_batch, sh.seq_len)
+    c_sh = cache_shardings(mesh, c_specs)
+    step = make_serve_step(model)
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh["tokens"],
+                                         b_sh["pos"]),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+    with mesh:
+        lowered = jitted.lower(p_specs_bf16, c_specs, bspecs["tokens"],
+                               bspecs["pos"])
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, args) -> dict:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        row["skipped"] = "pure full-attention arch (DESIGN.md §Arch-applicability)"
+        return row
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.size
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, mesh, args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    hlo = analyze_hlo(compiled.as_text(),
+                      pod_size=(n_dev // mesh.shape.get("pod", 1))
+                      if multi else 0)
+    t3 = time.time()
+    # analyzer numbers are trip-count aware (XLA cost_analysis visits while
+    # bodies once — see roofline.py); raw XLA numbers kept for reference
+    flops_dev = hlo["flops"]
+    bytes_dev = hlo["hbm_bytes"]
+    terms = roofline(flops_dev, bytes_dev, hlo, n_devices=n_dev,
+                     n_pods=mesh.shape.get("pod", 1))
+    mf = model_flops(cfg, sh)
+    # donated inputs alias outputs -> count max(args, out), not the sum
+    hbm_per_dev = (max(ma.argument_size_in_bytes, ma.output_size_in_bytes)
+                   + ma.temp_size_in_bytes)
+    row.update(
+        n_devices=n_dev, lower_s=round(t1 - t0, 1),
+        compile_s=round(t2 - t1, 1), analyze_s=round(t3 - t2, 1),
+        grad_accum=meta["grad_accum"], fsdp=meta["fsdp"],
+        hlo_flops_per_dev=flops_dev, hlo_bytes_per_dev=bytes_dev,
+        hlo_flops=flops_dev * n_dev, hlo_bytes=bytes_dev * n_dev,
+        xla_cost_flops_per_dev=float(ca.get("flops", 0.0)),
+        xla_cost_bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes=hlo["collective_bytes"] * n_dev,
+        collective_bytes_per_dev=hlo["collective_bytes"],
+        ici_bytes_per_dev=hlo["ici_bytes"],
+        dcn_bytes_per_dev=hlo["dcn_bytes"],
+        n_collectives=hlo["n_collectives"],
+        per_kind={k: v for k, v in hlo["per_kind"].items() if v},
+        model_flops=mf,
+        useful_flops_ratio=round(mf / max(flops_dev * n_dev, 1.0), 4),
+        mem_args_bytes=ma.argument_size_in_bytes,
+        mem_temp_bytes=ma.temp_size_in_bytes,
+        mem_out_bytes=ma.output_size_in_bytes,
+        hbm_per_dev_gb=round(hbm_per_dev / 1e9, 3),
+        fits_hbm=bool(hbm_per_dev <= hw.HBM_PER_CHIP),
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in terms.items()},
+    )
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--ce-chunk", type=int, default=1024)
+    ap.add_argument("--grad-accum", type=int, default=-1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel residual stream (Perf H1)")
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp"],
+                    help="dp = replicate weights, all axes to batch (H3)")
+    ap.add_argument("--causal-skip", action="store_true",
+                    help="recursive causal block-skip attention (H2)")
+    ap.add_argument("--accum-bf16", action="store_true",
+                    help="bf16 gradient accumulators (H3 iter 2)")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    rows = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            rows = json.load(f)
+    selected = {(a, s, m, args.tag) for a in archs for s in shapes
+                for m in meshes}
+    if args.force:  # re-run ONLY the selected cells; keep everything else
+        rows = [r for r in rows
+                if (r["arch"], r["shape"], r["mesh"],
+                    r.get("tag", "baseline")) not in selected]
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))
+            for r in rows}
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                key = (arch, shape, mesh_kind, args.tag)
+                if key in done:
+                    continue
+                try:
+                    row = run_cell(arch, shape, mesh_kind, args)
+                except Exception as e:  # record the failure, keep going
+                    row = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                row["tag"] = args.tag
+                rows.append(row)
+                with open(args.out, "w") as f:
+                    json.dump(rows, f, indent=1, default=str)
+                status = ("SKIP" if row.get("skipped") else
+                          ("FAIL" if row.get("error") else "ok"))
+                extra = ""
+                if status == "ok":
+                    extra = (f"flops/dev={row['hlo_flops_per_dev']:.3e} "
+                             f"bneck={row['bottleneck']} "
+                             f"hbm={row['hbm_per_dev_gb']}GB "
+                             f"compile={row['compile_s']}s")
+                elif status == "FAIL":
+                    extra = row["error"][:160]
+                print(f"[{status}] {arch} x {shape} x {mesh_kind} {extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

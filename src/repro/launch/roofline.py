@@ -1,0 +1,324 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+XLA's ``cost_analysis()`` visits every ``while`` body ONCE, so for
+scan-over-layers programs it under-counts FLOPs/bytes by ~L x grad_accum
+(verified empirically).  We therefore analyze the partitioned HLO text
+ourselves, trip-count aware:
+
+* Call-graph multipliers: ``while`` ops carry
+  ``backend_config={"known_trip_count":{"n":...}}`` — exact scan lengths;
+  fusions/calls propagate their caller's multiplier.
+* FLOPs: 2 * out_elems * contracted_elems for every ``dot``; convolutions
+  approximated (they are <0.1% here — mamba depthwise conv).
+* HBM bytes: per top-level op, unique operand bytes + output bytes — i.e.
+  traffic across *fusion boundaries*, XLA's own model of HBM touches.
+* Collective bytes: output-shape bytes per all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, classified ICI vs DCN
+  by whether replica groups cross a pod boundary.
+
+Everything is **per device** (the module is the SPMD-partitioned one).
+
+Terms (seconds), per DESIGN.md hardware constants:
+    compute    = flops_per_dev / 197e12
+    memory     = hbm_bytes_per_dev / 819e9
+    collective = ici_bytes_per_dev / 50e9 + dcn_bytes_per_host / 12.5e9
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# tuple shapes may contain /*index=N*/ comments, hence [^()] not [^=]
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_ELEM_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str):
+    """dims of the first array shape in the string (non-tuple)."""
+    m = _SHAPE_ELEM_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _crosses_pod(line: str, pod_size: int) -> bool:
+    if pod_size <= 0:
+        return False
+    m = re.search(r"replica_groups=\{(.*?)\}\}", line)
+    if m:
+        for grp in re.findall(r"\{([\d,\s]+)\}", m.group(1) + "}"):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if len({i // pod_size for i in ids}) > 1:
+                return True
+        return False
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+        line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims)))
+        if len(dims) > 1:
+            arr = arr.reshape(dims)
+            if m.group(4):
+                arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+        arr = arr.reshape(g, s)
+        for row in arr:
+            if len({int(i) // pod_size for i in row}) > 1:
+                return True
+    return False
+
+
+# ops that don't move HBM data themselves
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota", "custom-call", "rng-bit-generator",
+}
+
+
+def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> dict:
+    # ---- split into computations ----------------------------------------
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and "{" in line:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+        elif cur is not None:
+            s = line.strip()
+            if s == "}":
+                cur = None
+            elif s.startswith(("%", "ROOT")):
+                comps[cur].append(s)
+
+    # ---- parse ops per computation ---------------------------------------
+    @dataclass
+    class Op:
+        name: str
+        shape: str
+        op: str
+        rest: str
+
+    comp_ops: dict[str, list[Op]] = {}
+    name_shape: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        ops = []
+        shapes = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            o = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            ops.append(o)
+            shapes[o.name] = o.shape
+        comp_ops[cname] = ops
+        name_shape[cname] = shapes
+
+    # ---- call-graph multipliers -------------------------------------------
+    calls: dict[str, list[tuple[str, float]]] = {}
+    for cname, ops in comp_ops.items():
+        for o in ops:
+            line = o.rest
+            if o.op == "while":
+                b = re.search(r"body=%?([\w\.\-]+)", line)
+                c = re.search(r"condition=%?([\w\.\-]+)", line)
+                trip = 1.0
+                t = re.search(r'"known_trip_count":\{"n":"(\d+)"', line)
+                if t:
+                    trip = float(t.group(1))
+                elif c and c.group(1) in comps:
+                    consts = [int(x) for x in re.findall(
+                        r"constant\((\d+)\)", "\n".join(comps[c.group(1)]))]
+                    if consts:
+                        trip = float(max(consts))
+                if b:
+                    calls.setdefault(b.group(1), []).append((cname, trip))
+                if c:
+                    calls.setdefault(c.group(1), []).append((cname, trip))
+            else:
+                for callee in re.findall(
+                        r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)",
+                        line):
+                    calls.setdefault(callee, []).append((cname, 1.0))
+                bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if bm:
+                    for callee in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                        calls.setdefault(callee, []).append((cname, 1.0))
+
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    if entry:
+        mult[entry] = 1.0
+    for _ in range(64):
+        changed = False
+        for callee, sites in calls.items():
+            m = sum(mult.get(caller, 0.0) * t for caller, t in sites)
+            if callee in mult and m > 0 and abs(m - mult[callee]) > 1e-9:
+                mult[callee] = m
+                changed = True
+        if not changed:
+            break
+
+    # fusions' internal computations must not be double counted for traffic;
+    # we only count traffic/flops of *top-level* ops per computation, but
+    # dots live inside "wrapped" fusion computations on CPU dumps — so count
+    # dot FLOPs wherever they appear, with their computation's multiplier.
+    fusion_callees = set()
+    for cname, ops in comp_ops.items():
+        for o in ops:
+            if o.op == "fusion":
+                for callee in re.findall(r"calls=%?([\w\.\-]+)", o.rest):
+                    fusion_callees.add(callee)
+
+    flops = 0.0
+    hbm = 0.0
+    per_kind = {k: 0.0 for k in _COLL_KINDS}
+    coll_total = ici = dcn = 0.0
+    n_coll = 0
+
+    for cname, ops in comp_ops.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        shapes = name_shape[cname]
+        for o in ops:
+            base = o.op[:-6] if o.op.endswith("-start") else o.op
+            # ---------------- FLOPs: dots & convs -------------------------
+            if o.op in ("dot", "dot-general"):
+                out_elems = float(np.prod(_shape_dims(o.shape) or [1]))
+                lhs_m = re.match(r"%([\w\.\-]+)", o.rest)
+                contract = 1.0
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", o.rest)
+                if lhs_m and cm and lhs_m.group(1) in shapes:
+                    ldims = _shape_dims(shapes[lhs_m.group(1)])
+                    for ci in cm.group(1).split(","):
+                        if ci != "" and int(ci) < len(ldims):
+                            contract *= ldims[int(ci)]
+                flops += m * 2.0 * out_elems * contract
+            elif o.op == "convolution":
+                out_elems = float(np.prod(_shape_dims(o.shape) or [1]))
+                operands = re.findall(r"%([\w\.\-]+)", o.rest)
+                k_elems = 1.0
+                if len(operands) >= 2 and operands[1] in shapes:
+                    kd = _shape_dims(shapes[operands[1]])
+                    k_elems = float(np.prod(kd)) / max(kd[-1] if kd else 1, 1)
+                flops += m * 2.0 * out_elems * k_elems
+            # ---------------- collectives ---------------------------------
+            if base in _COLL_KINDS and not o.op.endswith("-done"):
+                b = _shape_bytes(o.shape) * m
+                per_kind[base] += b
+                coll_total += b
+                n_coll += 1
+                if _crosses_pod(o.rest, pod_size):
+                    dcn += b
+                else:
+                    ici += b
+            # ---------------- HBM traffic ---------------------------------
+            # TPU fuses elementwise chains; the CPU dump does not.  Model:
+            # inside loop bodies (mult > 1) count only the ops whose
+            # operands/outputs genuinely stream HBM on TPU — matmuls,
+            # big slices/updates (KV cache), copies, collectives, reduces.
+            # At top level (mult == 1) count every op boundary: that is the
+            # once-per-step optimizer-state and gradient traffic.
+            if cname in fusion_callees:
+                continue  # inside a fusion: no HBM traffic
+            if o.op in _NO_TRAFFIC or o.op.endswith("-done"):
+                continue
+
+            def _operands_bytes(limit=None):
+                total, seen = 0.0, set()
+                for opnd in re.findall(r"%([\w\.\-]+)", o.rest):
+                    if opnd in shapes and opnd not in seen:
+                        seen.add(opnd)
+                        total += _shape_bytes(shapes[opnd])
+                        if limit and len(seen) >= limit:
+                            break
+                return total
+
+            out_b = _shape_bytes(o.shape)
+            if o.op in ("dot", "convolution"):
+                traffic = out_b + _operands_bytes()
+            elif o.op == "dynamic-update-slice":
+                # in-place on TPU: read+write of the update slice only
+                opnds = re.findall(r"%([\w\.\-]+)", o.rest)
+                upd = (_shape_bytes(shapes[opnds[1]])
+                       if len(opnds) > 1 and opnds[1] in shapes else out_b)
+                traffic = 2.0 * upd
+            elif o.op in ("dynamic-slice", "gather", "slice"):
+                traffic = 2.0 * out_b
+            elif o.op in ("copy", "transpose", "reshape", "reduce",
+                          "reduce-window", "scatter", "concatenate", "sort",
+                          "select-and-scatter") or base in _COLL_KINDS:
+                traffic = out_b + _operands_bytes()
+            elif m <= 1.0:
+                traffic = out_b + _operands_bytes()
+            else:
+                continue
+            hbm += m * traffic
+
+    return {"flops": flops, "hbm_bytes": hbm,
+            "collective_bytes": coll_total, "ici_bytes": ici,
+            "dcn_bytes": dcn, "per_kind": per_kind, "n_collectives": n_coll}
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float, coll: dict,
+             *, n_devices: int, n_pods: int = 1) -> dict:
+    """The three roofline terms in seconds (per step, per device)."""
+    compute_s = flops_per_dev / hw.PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / hw.HBM_BW
+    ici_s = coll["ici_bytes"] / hw.ICI_BW
+    hosts = max(n_devices // hw.CHIPS_PER_HOST, 1)
+    dcn_s = (coll["dcn_bytes"] * n_devices / hosts / hw.DCN_BW_PER_HOST
+             if coll["dcn_bytes"] else 0.0)
+    collective_s = ici_s + dcn_s
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "ici_s": ici_s, "dcn_s": dcn_s}
+    terms["bottleneck"] = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    terms["step_s"] = max(compute_s, memory_s) + collective_s
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq

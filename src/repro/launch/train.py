@@ -1,0 +1,73 @@
+"""Training launcher — the per-job driver Scylla's Task-0 analogue runs.
+
+On real hardware every host runs this same script; jax.distributed wires the
+gang together and the mesh spans the placement chosen by the scheduler.  On
+this CPU container it runs reduced configs on a 1-device mesh (use
+``launch/dryrun.py`` for the full-scale compile-only path).
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.data import MarkovSynthetic
+from repro.models import LM, RuntimeKnobs
+from repro.optim import AdamWConfig
+from repro.runtime.train import TrainConfig, Trainer
+from repro.sharding import make_shard_fn
+from repro.launch.mesh import make_job_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--bf16", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    n_dev = len(jax.devices())
+    mesh = make_job_mesh(n_dev) if n_dev > 1 else None
+    knobs = RuntimeKnobs(
+        param_dtype=jnp.bfloat16 if args.bf16 else jnp.float32,
+        compute_dtype=jnp.bfloat16 if args.bf16 else jnp.float32,
+        cache_dtype=jnp.float32,
+        q_chunk=min(128, args.seq),
+        ce_chunk=min(256, args.seq),
+        shard_fn=make_shard_fn(mesh, cfg) if mesh else (lambda n, x: x),
+    )
+    model = LM(cfg, knobs)
+    print(f"arch={args.arch} smoke={args.smoke} "
+          f"params={cfg.param_count() / 1e6:.1f}M devices={n_dev}")
+    data = MarkovSynthetic(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                           global_batch=args.batch, seed=0, noise=0.1)
+    tcfg = TrainConfig(
+        steps=args.steps, grad_accum=args.grad_accum,
+        checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir or None, log_every=10,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps))
+    trainer = Trainer(model, data, tcfg, mesh=mesh)
+    out = trainer.run()
+    for h in out["history"]:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"grad_norm {h['grad_norm']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .model import LM, RuntimeKnobs, build_model
+
+__all__ = ["LM", "RuntimeKnobs", "build_model"]

@@ -1,0 +1,137 @@
+"""LM: the composable model wrapper used by training, serving, and dry-run.
+
+``LM`` is a plain object holding the arch config + runtime knobs; all methods
+are pure functions of explicit params/caches and safe to ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import chunked_ce_loss, embed, embedding_init, rmsnorm, rmsnorm_init, unembed
+from .transformer import apply_blocks, apply_blocks_decode, init_blocks, init_cache
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+def _identity_shard(name: str, x):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeKnobs:
+    """Perf / execution knobs — the hillclimbing surface."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    cache_dtype: Any = jnp.bfloat16
+    q_chunk: int = 512  # flash-attention query block
+    ce_chunk: int = 1024  # chunked cross-entropy block
+    remat: bool = True
+    use_pallas: bool = False  # Pallas kernels (TPU); XLA path otherwise
+    causal_skip: bool = False  # unrolled causal block-skip attention (H2)
+    shard_fn: Callable = _identity_shard  # sharding-constraint hook
+
+    def with_(self, **kw) -> "RuntimeKnobs":
+        return dataclasses.replace(self, **kw)
+
+
+class LM:
+    def __init__(self, cfg, knobs: Optional[RuntimeKnobs] = None):
+        self.cfg = cfg
+        self.knobs = knobs or RuntimeKnobs()
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg, dt = self.cfg, self.knobs.param_dtype
+        k1, k2 = jax.random.split(key)
+        return {
+            "embed": embedding_init(k1, cfg.vocab_size, cfg.d_model,
+                                    cfg.tie_embeddings, dt),
+            "blocks": init_blocks(k2, cfg, dt),
+            "final_norm": rmsnorm_init(cfg.d_model, dt),
+        }
+
+    def param_specs(self):
+        """Abstract params (no allocation) for the dry-run."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------ forward
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings":
+            x = batch["embeds"].astype(self.knobs.compute_dtype)
+        else:
+            x = embed(params["embed"], batch["tokens"])
+        return x.astype(self.knobs.compute_dtype)
+
+    def hidden(self, params, batch, mode: str):
+        x = self._embed_inputs(params, batch)
+        x = self.knobs.shard_fn("hidden", x)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x, aux, caches = apply_blocks(params["blocks"], x, positions,
+                                      cfg=self.cfg, knobs=self.knobs, mode=mode)
+        x = rmsnorm(params["final_norm"], x)
+        return x, aux, caches
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        """Next-token CE (+ MoE aux).  batch: tokens (B,S) [+ embeds]."""
+        x, aux, _ = self.hidden(params, batch, mode="train")
+        tokens = batch["tokens"]
+        targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tokens[:, 1:], jnp.float32),
+                       ((0, 0), (0, 1)))
+        ce = chunked_ce_loss(params["embed"], x, targets, mask,
+                             chunk=self.knobs.ce_chunk)
+        loss = ce
+        metrics = {"ce_loss": ce}
+        if aux:
+            n_moe = max(1, sum(1 for k in build_kinds(self.cfg) if k == "moe"))
+            lb = aux["moe_lb_loss"] / n_moe
+            zl = aux["moe_z_loss"] / n_moe
+            loss = loss + MOE_LB_COEF * lb + MOE_Z_COEF * zl
+            metrics.update(moe_lb_loss=lb, moe_z_loss=zl,
+                           moe_drop_frac=aux["moe_drop_frac"] / n_moe)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params, batch):
+        """Returns (last-position logits (B,V), caches)."""
+        x, _, caches = self.hidden(params, batch, mode="prefill")
+        logits = unembed(params["embed"], x[:, -1:, :])[:, 0, :]
+        return logits.astype(jnp.float32), caches
+
+    # ------------------------------------------------------------- decode
+    def decode_step(self, params, caches, tokens, pos):
+        """tokens (B,1) int32, pos scalar -> (logits (B,V), new caches)."""
+        x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
+        x, new_caches = apply_blocks_decode(params["blocks"], x, caches, pos,
+                                            cfg=self.cfg, knobs=self.knobs)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)[:, 0, :]
+        return logits.astype(jnp.float32), new_caches
+
+    # -------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int):
+        return init_cache(self.cfg, self.knobs, batch, max_len)
+
+    def cache_specs(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+
+def build_kinds(cfg):
+    return cfg.layer_kinds()
+
+
+def build_model(arch: str, smoke: bool = False,
+                knobs: Optional[RuntimeKnobs] = None) -> LM:
+    from repro.configs import get_config
+
+    return LM(get_config(arch, smoke=smoke), knobs)

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN with chunked capacity-based dispatch.
+
+Design (see DESIGN.md):
+
+* Naive GShard one-hot dispatch costs O(S^2 * k * cf * d_model) per batch row
+  because expert capacity grows with the token count being dispatched.  We
+  therefore dispatch in *sequence chunks* of ``dispatch_chunk`` tokens: the
+  one-hot einsum cost becomes linear in S (~10-20% of the expert matmul
+  FLOPs at chunk=512) while staying fully shardable by the XLA SPMD
+  partitioner (expert axis -> "model", batch axis -> "data"; the dispatch
+  einsum lowers to the expected all-to-all).
+* Capacity per chunk C = ceil(chunk * k / E * capacity_factor); overflow
+  tokens are dropped (their residual passes through) — standard GShard
+  semantics.
+* Router computed in fp32; aux losses: Switch-style load-balance + z-loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+
+def moe_init(key, d_model: int, moe_cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, dff = moe_cfg.num_experts, moe_cfg.d_ff
+    return {
+        "router": _init(ks[0], (d_model, e), dtype=jnp.float32),
+        "w_gate": _init(ks[1], (e, d_model, dff), dtype=dtype),
+        "w_up": _init(ks[2], (e, d_model, dff), dtype=dtype),
+        "w_down": _init(ks[3], (e, dff, d_model), dtype=dtype),
+    }
+
+
+def _capacity(chunk: int, moe_cfg, train: bool) -> int:
+    cf = moe_cfg.capacity_factor if train else moe_cfg.eval_capacity_factor
+    c = int(chunk * moe_cfg.experts_per_token * cf / moe_cfg.num_experts)
+    # never allow fewer slots than one token's k choices (decode must not drop)
+    return max(moe_cfg.experts_per_token, c)
+
+
+def moe_ffn(params, x, moe_cfg, *, train=True, shard_fn=lambda name, v: v):
+    """x: (B, S, d) -> (out (B, S, d), aux_losses dict)."""
+    b, s, d = x.shape
+    e, k = moe_cfg.num_experts, moe_cfg.experts_per_token
+    chunk = min(moe_cfg.dispatch_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    cap = _capacity(chunk, moe_cfg, train)
+    xc = x.reshape(b, n, chunk, d)
+
+    # ---- router (fp32) -------------------------------------------------
+    logits = jnp.einsum("bncd,de->bnce", xc.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(logits, k)  # (b,n,c,k)
+    top_w = jax.nn.softmax(top_vals, axis=-1)  # normalize over chosen experts
+
+    # ---- position-in-expert via cumsum over (k-major, then token) ------
+    # slot order: all slot-0 choices first (priority to the top choice).
+    idx_flat = top_idx.swapaxes(2, 3).reshape(b, n, k * chunk)  # (b,n,k*c)
+    oh = jax.nn.one_hot(idx_flat, e, dtype=jnp.int32)  # (b,n,k*c,E)
+    pos_flat = jnp.cumsum(oh, axis=2) * oh - 1  # position within expert
+    pos_flat = jnp.max(pos_flat, axis=-1)  # (b,n,k*c) ; -1 where impossible
+    pos = pos_flat.reshape(b, n, k, chunk).swapaxes(2, 3)  # (b,n,c,k)
+    keep = (pos >= 0) & (pos < cap)
+
+    # ---- one-hot dispatch / combine tensors (b,n,c,E,C) ----------------
+    oh_e = jax.nn.one_hot(top_idx, e, dtype=x.dtype) * keep[..., None]
+    oh_c = jax.nn.one_hot(jnp.clip(pos, 0, cap - 1), cap, dtype=x.dtype)
+    dispatch = jnp.einsum("bnckE,bnckC->bncEC", oh_e, oh_c)
+    combine = jnp.einsum("bnck,bnckE,bnckC->bncEC",
+                         top_w.astype(x.dtype), oh_e, oh_c)
+
+    # ---- expert compute -------------------------------------------------
+    expert_in = jnp.einsum("bncEC,bncd->bnECd", dispatch, x.reshape(b, n, chunk, d))
+    expert_in = shard_fn("moe_expert_in", expert_in)
+    h = jax.nn.silu(jnp.einsum("bnECd,Edf->bnECf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("bnECd,Edf->bnECf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("bnECf,Efd->bnECd", h, params["w_down"])
+    expert_out = shard_fn("moe_expert_out", expert_out)
+    out = jnp.einsum("bncEC,bnECd->bncd", combine, expert_out)
+
+    # ---- aux losses ------------------------------------------------------
+    # load-balance: fraction of (kept) slots routed to each expert vs mean prob
+    frac = jnp.mean(oh_e.astype(jnp.float32).sum(axis=3), axis=(0, 1, 2)) / k
+    mean_prob = jnp.mean(probs, axis=(0, 1, 2))
+    lb_loss = e * jnp.sum(frac * mean_prob)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss, "moe_drop_frac": drop_frac}
+    return out.reshape(b, s, d), aux
+
+
+def moe_ffn_ref(params, x, moe_cfg):
+    """Dense oracle: every expert computes every token (for tests only)."""
+    b, s, d = x.shape
+    e, k = moe_cfg.num_experts, moe_cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    top_vals, top_idx = jax.lax.top_k(logits, k)
+    top_w = jax.nn.softmax(top_vals, axis=-1)
+    gates = jnp.zeros((b, s, e), x.dtype)
+    gates = jnp.take_along_axis(
+        gates, top_idx, axis=-1
+    )  # placeholder to keep shapes clear
+    # scatter weights into a dense (b,s,E) gate matrix
+    gates = jnp.sum(
+        jax.nn.one_hot(top_idx, e, dtype=x.dtype) * top_w[..., None].astype(x.dtype),
+        axis=2,
+    )
+    h_gate = jnp.einsum("bsd,edf->bsef", x, params["w_gate"])
+    h_up = jnp.einsum("bsd,edf->bsef", x, params["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    y = jnp.einsum("bsef,efd->bsed", h, params["w_down"])
+    return jnp.einsum("bse,bsed->bsd", gates, y)

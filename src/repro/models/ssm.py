@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Chunked SSD algorithm (arXiv:2405.21060): within a chunk of Q tokens the
+token-mixing is a masked, decay-weighted "attention" matmul (MXU-friendly);
+across chunks a small (heads, head_dim, d_state) state is carried by a
+sequential scan.  Per-token decode is the O(1) linear recurrence.
+
+    S_t = exp(dt_t * a) * S_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . S_t + D * x_t
+
+The intra-chunk matmuls are the perf-critical hot spot mirrored by the
+Pallas kernel in ``repro.kernels.ssd_scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _init, rmsnorm
+
+
+def _dims(d_model: int, cfg):
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    conv_dim = di + 2 * cfg.n_groups * cfg.d_state
+    return di, nh, conv_dim
+
+
+def ssm_init(key, d_model: int, cfg, dtype=jnp.float32):
+    di, nh, conv_dim = _dims(d_model, cfg)
+    g, ds = cfg.n_groups, cfg.d_state
+    ks = jax.random.split(key, 6)
+    d_in = 2 * di + 2 * g * ds + nh  # z, x, B, C, dt
+    # dt bias such that softplus(dt_bias) ~ U[1e-3, 1e-1]
+    u = jax.random.uniform(ks[3], (nh,), minval=np.log(1e-3), maxval=np.log(1e-1))
+    dt0 = jnp.exp(u)
+    return {
+        "in_proj": _init(ks[0], (d_model, d_in), dtype=dtype),
+        "conv_w": _init(ks[1], (cfg.conv_width, conv_dim), scale=0.2, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (nh,), minval=1.0, maxval=16.0)),
+        "dt_bias": dt0 + jnp.log(-jnp.expm1(-dt0)),  # inverse softplus
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype=dtype),
+        "out_proj": _init(ks[4], (di, d_model), dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_model, cfg):
+    di, nh, _ = _dims(d_model, cfg)
+    g, ds = cfg.n_groups, cfg.d_state
+    z, xs, bs, cs, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * ds, 2 * di + 2 * g * ds], axis=-1
+    )
+    return z, xs, bs, cs, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv1d.  xbc (B,S,ch); conv_w (w,ch)."""
+    w, ch = conv_w.shape
+    rhs = conv_w[:, None, :].astype(xbc.dtype)  # (w, 1, ch) 'WIO' depthwise
+    out = jax.lax.conv_general_dilated(
+        xbc, rhs, window_strides=(1,), padding=[(w - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=ch,
+    )
+    return out + conv_b.astype(xbc.dtype)
+
+
+def ssm_forward(params, x, d_model: int, cfg, *, initial_state=None,
+                return_state=False, use_pallas=False):
+    """Full-sequence chunked SSD.  x (B,S,dm) -> y (B,S,dm) [+ cache].
+
+    use_pallas=True swaps the intra-chunk matmuls for the Pallas TPU
+    kernel (kernels/ssd_scan.py); interpret mode on CPU."""
+    b, s, _ = x.shape
+    di, nh, conv_dim = _dims(d_model, cfg)
+    g, ds, hp = cfg.n_groups, cfg.d_state, cfg.head_dim
+    q = min(cfg.chunk_size, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    zxbcdt = x @ params["in_proj"]
+    z, xs, bs, cs, dt_raw = _split_proj(zxbcdt, d_model, cfg)
+    xbc = jnp.concatenate([xs, bs, cs], axis=-1)
+    conv_tail = xbc[:, max(s - (cfg.conv_width - 1), 0):, :]  # decode conv cache
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, bs, cs = jnp.split(xbc, [di, di + g * ds], axis=-1)
+
+    xh = xs.reshape(b, nc, q, nh, hp)
+    bh = bs.reshape(b, nc, q, g, ds)
+    ch_ = cs.reshape(b, nc, q, g, ds)
+    rep = nh // g
+    bh = jnp.repeat(bh, rep, axis=3)  # (b,nc,q,nh,ds)
+    chh = jnp.repeat(ch_, rep, axis=3)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,s,nh)
+    dt = dt.reshape(b, nc, q, nh)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (nh,) negative
+    da = dt * a  # (b,nc,q,nh)
+    cum = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (quadratic within q) -------------------------------
+    # att[t,j] = exp(cum_t - cum_j) * dt_j * (C_t . B_j),  j <= t
+    if use_pallas:
+        from repro.kernels import ssd_chunk
+
+        bg = bs.reshape(b, nc, q, g, ds).transpose(0, 1, 3, 2, 4)
+        cg = cs.reshape(b, nc, q, g, ds).transpose(0, 1, 3, 2, 4)
+        yk, st = ssd_chunk(xh.transpose(0, 1, 3, 2, 4), bg, cg,
+                           dt.transpose(0, 1, 3, 2),
+                           cum.transpose(0, 1, 3, 2))
+        y_intra = yk.transpose(0, 1, 3, 2, 4)  # (b,nc,q,nh,hp)
+        s_chunk = st.transpose(0, 1, 2, 4, 3)  # -> (b,nc,nh,hp,ds)
+    else:
+        cb = jnp.einsum("bnqhs,bnkhs->bnhqk", chh.astype(jnp.float32),
+                        bh.astype(jnp.float32))
+        decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+        att = (cb * decay.transpose(0, 1, 4, 2, 3)
+               * dt[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+        mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+        att = jnp.where(mask[None, None, None], att, 0.0)
+        y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", att.astype(x.dtype), xh)
+        last_ = cum[:, :, -1:, :]
+        w_state = jnp.exp(last_ - cum) * dt  # (b,nc,q,nh)
+        s_chunk = jnp.einsum("bnkhs,bnkhp->bnhps",
+                             (bh.astype(jnp.float32) * w_state[..., None]),
+                             xh.astype(jnp.float32))  # (b,nc,nh,hp,ds)
+
+    # ---- chunk states and inter-chunk scan ------------------------------
+    last = cum[:, :, -1:, :]  # (b,nc,1,nh)
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (b,nc,nh)
+
+    s0 = (jnp.zeros((b, nh, hp, ds), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def scan_body(state, inp):
+        sc, dec = inp
+        before = state
+        state = state * dec[:, :, None, None] + sc
+        return state, before
+
+    s_chunk_t = s_chunk.swapaxes(0, 1)  # (nc,b,...)
+    dec_t = chunk_decay.swapaxes(0, 1)
+    final_state, states_before = jax.lax.scan(scan_body, s0, (s_chunk_t, dec_t))
+    states_before = states_before.swapaxes(0, 1)  # (b,nc,nh,hp,ds)
+
+    y_inter = jnp.einsum("bnqhs,bnhps->bnqhp",
+                         chh.astype(jnp.float32) * jnp.exp(cum)[..., None],
+                         states_before).astype(x.dtype)
+
+    y = y_intra + y_inter + (params["D"].astype(x.dtype)[None, None, None, :, None]
+                             * xh)
+    y = y.reshape(b, s, di)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if return_state:
+        cw = cfg.conv_width - 1
+        pad = cw - conv_tail.shape[1]
+        if pad > 0:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": conv_tail.astype(x.dtype), "state": final_state}
+    return out
+
+
+def ssm_init_cache(batch: int, d_model: int, cfg, dtype=jnp.bfloat16):
+    di, nh, conv_dim = _dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(params, cache, x_tok, d_model: int, cfg):
+    """x_tok (B,1,dm) -> (y (B,1,dm), new cache).  O(1) per token."""
+    b = x_tok.shape[0]
+    di, nh, conv_dim = _dims(d_model, cfg)
+    g, ds, hp = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = x_tok[:, 0, :] @ params["in_proj"]  # (B, d_in)
+    z, xs, bs, cs, dt_raw = _split_proj(zxbcdt, d_model, cfg)
+    xbc = jnp.concatenate([xs, bs, cs], axis=-1)  # (B, conv_dim)
+
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,w,ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    conv_out = conv_out.astype(x_tok.dtype)
+    xs, bs, cs = jnp.split(conv_out, [di, di + g * ds], axis=-1)
+
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32)
+    bh = jnp.repeat(bs.reshape(b, g, ds), nh // g, axis=1).astype(jnp.float32)
+    chh = jnp.repeat(cs.reshape(b, g, ds), nh // g, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # (B,nh)
+
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bhs->bhps", xh * dt[..., None], bh)
+    y = jnp.einsum("bhs,bhps->bhp", chh, state)  # (B,nh,hp)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, di).astype(x_tok.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = (y @ params["out_proj"])[:, None, :]
+    new_cache = {"conv": window[:, 1:, :].astype(cache["conv"].dtype),
+                 "state": state}
+    return out, new_cache

@@ -1,0 +1,368 @@
+"""Transformer assembly: stacked layers consumed by ``jax.lax.scan``.
+
+Layer parameters are stored *stacked* over a leading layer axis so the whole
+depth lowers to a single scanned HLO body (compile time and HLO size stay
+O(1) in depth — essential for the 94-layer dry-runs).
+
+Three structural plans (see DESIGN.md):
+
+* uniform   — L identical blocks (dense / moe / ssm / swa archs).
+* grouped   — repeating groups of (period-1) inner blocks + 1 outer block
+              (gemma3: 5 local-window layers + 1 global layer), plus a
+              remainder stack.  Window sizes stay *static* per call site so
+              the sliding-window KV slicing lowers to static shapes.
+* grouped+shared — zamba2: groups of 6 mamba2 blocks followed by ONE shared
+              transformer block (weights reused across groups; per-group KV
+              caches at decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from .moe import moe_ffn, moe_init
+from .ssm import ssm_decode_step, ssm_forward, ssm_init, ssm_init_cache
+
+MOE_AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    kind: str  # "uniform" | "grouped"
+    n_layers: int
+    inner_kind: str  # "attn" | "ssm"
+    inner_window: int = 0
+    # grouped only:
+    period: int = 0  # group size incl. outer block (gemma3: 6)
+    n_groups: int = 0
+    inner_per_group: int = 0
+    remainder: int = 0
+    outer_kind: Optional[str] = None  # "attn"
+    outer_window: int = 0
+    outer_shared: bool = False  # zamba2
+
+
+def build_plan(cfg) -> Plan:
+    if cfg.family == "hybrid":
+        p = cfg.shared_attn_period
+        return Plan(
+            kind="grouped", n_layers=cfg.num_layers, inner_kind="ssm",
+            period=p, n_groups=cfg.num_layers // p, inner_per_group=p,
+            remainder=cfg.num_layers % p, outer_kind="attn", outer_window=0,
+            outer_shared=True,
+        )
+    if cfg.local_global_period:
+        p = cfg.local_global_period
+        return Plan(
+            kind="grouped", n_layers=cfg.num_layers, inner_kind="attn",
+            inner_window=cfg.local_window, period=p,
+            n_groups=cfg.num_layers // p, inner_per_group=p - 1,
+            remainder=cfg.num_layers % p, outer_kind="attn", outer_window=0,
+        )
+    if cfg.family == "ssm":
+        return Plan(kind="uniform", n_layers=cfg.num_layers, inner_kind="ssm")
+    return Plan(kind="uniform", n_layers=cfg.num_layers, inner_kind="attn",
+                inner_window=cfg.window)
+
+
+# ===================================================================== init
+def _init_attn_block(key, cfg, dtype, ffn: str):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attention_init(
+            ks[0], d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, dtype=dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if ffn == "moe":
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe, dtype)
+    elif ffn == "mlp":
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    return p
+
+
+def _init_ssm_block(key, cfg, dtype):
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "ssm": ssm_init(key, cfg.d_model, cfg.ssm, dtype)}
+
+
+def _ffn_kind(cfg) -> str:
+    return "moe" if cfg.moe is not None else ("mlp" if cfg.d_ff else "none")
+
+
+def _stack(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_blocks(key, cfg, dtype):
+    plan = build_plan(cfg)
+    ffn = _ffn_kind(cfg)
+    if plan.inner_kind == "attn":
+        inner_init = lambda k: _init_attn_block(k, cfg, dtype, ffn)
+    else:
+        inner_init = lambda k: _init_ssm_block(k, cfg, dtype)
+    if plan.kind == "uniform":
+        return {"stack": _stack(key, plan.n_layers, inner_init)}
+    ks = jax.random.split(key, 3)
+    blocks = {
+        "inner": jax.vmap(lambda kk: _stack(kk, plan.inner_per_group, inner_init))(
+            jax.random.split(ks[0], plan.n_groups)),
+    }
+    if plan.remainder:
+        blocks["rem"] = _stack(ks[1], plan.remainder, inner_init)
+    if plan.outer_shared:
+        blocks["outer"] = _init_attn_block(ks[2], cfg, dtype, "mlp")
+    else:
+        blocks["outer"] = _stack(ks[2], plan.n_groups,
+                                 lambda k: _init_attn_block(k, cfg, dtype, ffn))
+    return blocks
+
+
+# ============================================================ block bodies
+def _zero_aux(cfg):
+    if cfg.moe is not None:
+        return {k: jnp.float32(0.0) for k in MOE_AUX_KEYS}
+    return {}
+
+
+def _acc_aux(aux, new):
+    if not aux:
+        return aux
+    return {k: aux[k] + new.get(k, 0.0) for k in aux}
+
+
+def _apply_attn_block(p, x, positions, *, cfg, window, knobs, collect_cache,
+                      ffn, shard_fn):
+    h = rmsnorm(p["ln1"], x)
+    q, k, v = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
+    q = shard_fn("attn_q", q)
+    k = shard_fn("attn_kv", k)
+    v = shard_fn("attn_kv", v)
+    if knobs.use_pallas:
+        from repro.kernels import flash_attention as _pallas_flash
+
+        blk = min(knobs.q_chunk, q.shape[1])
+        ctx = _pallas_flash(q, k, v, causal=True, window=window,
+                            block_q=blk, block_k=blk)
+    else:
+        ctx = attn.flash_attention_xla(q, k, v, causal=True, window=window,
+                                       q_chunk=knobs.q_chunk,
+                                       causal_skip=knobs.causal_skip)
+    x = x + attn.attn_output(p["attn"], ctx)
+    h2 = rmsnorm(p["ln2"], x)
+    aux = {}
+    if ffn == "moe":
+        out, aux = moe_ffn(p["moe"], h2, cfg.moe, train=not collect_cache,
+                           shard_fn=shard_fn)
+    elif ffn == "mlp":
+        out = mlp(p["mlp"], h2, cfg.gated_mlp)
+    else:
+        out = jnp.zeros_like(h2)
+    x = x + out
+    x = shard_fn("hidden", x)
+    cache = ({"k": k.astype(knobs.cache_dtype), "v": v.astype(knobs.cache_dtype)}
+             if collect_cache else None)
+    return x, aux, cache
+
+
+def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
+                             shard_fn):
+    b = x.shape[0]
+    h = rmsnorm(p["ln1"], x)
+    positions = jnp.full((b, 1), pos)
+    q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
+    kc, vc = attn.cache_update(cache["k"], cache["v"], k_new, v_new, pos)
+    if knobs.use_pallas:
+        from repro.kernels import decode_attention as _pallas_decode
+
+        blk = min(512, kc.shape[1])
+        ctx = _pallas_decode(q, kc, vc, pos, window=window, block_k=blk)
+    else:
+        ctx = attn.decode_attention_xla(q, kc, vc, pos, window=window)
+    x = x + attn.attn_output(p["attn"], ctx)
+    h2 = rmsnorm(p["ln2"], x)
+    if ffn == "moe":
+        out, _ = moe_ffn(p["moe"], h2, cfg.moe, train=False, shard_fn=shard_fn)
+    elif ffn == "mlp":
+        out = mlp(p["mlp"], h2, cfg.gated_mlp)
+    else:
+        out = jnp.zeros_like(h2)
+    return x + out, {"k": kc, "v": vc}
+
+
+def _apply_ssm_block(p, x, *, cfg, collect_cache, shard_fn,
+                     use_pallas=False):
+    h = rmsnorm(p["ln"], x)
+    if collect_cache:
+        y, state = ssm_forward(p["ssm"], h, cfg.d_model, cfg.ssm,
+                               return_state=True, use_pallas=use_pallas)
+    else:
+        y = ssm_forward(p["ssm"], h, cfg.d_model, cfg.ssm,
+                        use_pallas=use_pallas)
+        state = None
+    x = shard_fn("hidden", x + y)
+    return x, {}, state
+
+
+def _apply_ssm_block_decode(p, x, cache, *, cfg, shard_fn):
+    h = rmsnorm(p["ln"], x)
+    y, new_cache = ssm_decode_step(p["ssm"], cache, h, cfg.d_model, cfg.ssm)
+    return x + y, new_cache
+
+
+# ========================================================== sequence apply
+def apply_blocks(blocks, x, positions, *, cfg, knobs, mode: str):
+    """mode: 'train' (no caches) | 'prefill' (emit caches).
+
+    Returns (x, aux, caches_or_None).
+    """
+    plan = build_plan(cfg)
+    ffn = _ffn_kind(cfg)
+    shard_fn = knobs.shard_fn
+    collect = mode == "prefill"
+    remat = knobs.remat and mode == "train"
+
+    def inner_body(p, xx, window):
+        if plan.inner_kind == "attn":
+            return _apply_attn_block(p, xx, positions, cfg=cfg, window=window,
+                                     knobs=knobs, collect_cache=collect,
+                                     ffn=ffn, shard_fn=shard_fn)
+        return _apply_ssm_block(p, xx, cfg=cfg, collect_cache=collect,
+                                shard_fn=shard_fn,
+                                use_pallas=knobs.use_pallas)
+
+    def outer_body(p, xx):
+        return _apply_attn_block(
+            p, xx, positions, cfg=cfg, window=plan.outer_window, knobs=knobs,
+            collect_cache=collect, ffn="mlp" if plan.outer_shared else ffn,
+            shard_fn=shard_fn)
+
+    def scan_stack(stack, carry, window):
+        def body(c, p):
+            xx, aux = c
+            xx, a, cache = inner_body(p, xx, window)
+            return (xx, _acc_aux(aux, a)), cache
+        if remat:
+            body = jax.checkpoint(body)
+        return jax.lax.scan(body, carry, stack)
+
+    carry = (x, _zero_aux(cfg))
+    if plan.kind == "uniform":
+        carry, caches = scan_stack(blocks["stack"], carry, plan.inner_window)
+        x, aux = carry
+        return x, aux, ({"stack": caches} if collect else None)
+
+    # grouped
+    def group_body(c, xs):
+        inner_stack = xs["inner"]
+        c, inner_caches = scan_stack(inner_stack, c, plan.inner_window)
+        xx, aux = c
+        op = blocks["outer"] if plan.outer_shared else xs["outer"]
+        xx, a, ocache = outer_body(op, xx)
+        return (xx, _acc_aux(aux, a)), {"inner": inner_caches, "outer": ocache}
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    xs = {"inner": blocks["inner"]}
+    if not plan.outer_shared:
+        xs["outer"] = blocks["outer"]
+    carry, gcaches = jax.lax.scan(group_body, carry, xs)
+    if plan.remainder:
+        carry, rcaches = scan_stack(blocks["rem"], carry, plan.inner_window)
+    x, aux = carry
+    if not collect:
+        return x, aux, None
+    caches = {"groups": gcaches}
+    if plan.remainder:
+        caches["rem"] = rcaches
+    return x, aux, caches
+
+
+# ============================================================ decode apply
+def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs):
+    plan = build_plan(cfg)
+    ffn = _ffn_kind(cfg)
+    shard_fn = knobs.shard_fn
+
+    def inner_body(p, xx, cache, window):
+        if plan.inner_kind == "attn":
+            return _apply_attn_block_decode(p, xx, cache, pos, cfg=cfg,
+                                            window=window, knobs=knobs,
+                                            ffn=ffn, shard_fn=shard_fn)
+        return _apply_ssm_block_decode(p, xx, cache, cfg=cfg, shard_fn=shard_fn)
+
+    def scan_stack(stack, cstack, xx, window):
+        def body(c, inp):
+            p, cache = inp
+            c, new = inner_body(p, c, cache, window)
+            return c, new
+        return jax.lax.scan(body, xx, (stack, cstack))
+
+    if plan.kind == "uniform":
+        x, new = scan_stack(blocks["stack"], caches["stack"], x,
+                            plan.inner_window)
+        return x, {"stack": new}
+
+    def group_body(xx, inp):
+        xs, gcache = inp
+        xx, new_inner = scan_stack(xs["inner"], gcache["inner"], xx,
+                                   plan.inner_window)
+        op = blocks["outer"] if plan.outer_shared else xs["outer"]
+        xx, new_outer = _apply_attn_block_decode(
+            op, xx, gcache["outer"], pos, cfg=cfg, window=plan.outer_window,
+            knobs=knobs, ffn="mlp" if plan.outer_shared else ffn,
+            shard_fn=shard_fn)
+        return xx, {"inner": new_inner, "outer": new_outer}
+
+    xs = {"inner": blocks["inner"]}
+    if not plan.outer_shared:
+        xs["outer"] = blocks["outer"]
+    x, new_g = jax.lax.scan(group_body, x, (xs, caches["groups"]))
+    new_caches = {"groups": new_g}
+    if plan.remainder:
+        x, new_rem = scan_stack(blocks["rem"], caches["rem"], x,
+                                plan.inner_window)
+        new_caches["rem"] = new_rem
+    return x, new_caches
+
+
+# ============================================================== cache init
+def init_cache(cfg, knobs, batch: int, max_len: int):
+    plan = build_plan(cfg)
+
+    def attn_cache():
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           knobs.cache_dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           knobs.cache_dtype),
+        }
+
+    def inner_cache():
+        if plan.inner_kind == "attn":
+            return attn_cache()
+        return ssm_init_cache(batch, cfg.d_model, cfg.ssm, knobs.cache_dtype)
+
+    def stack(n, fn):
+        return jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (n,) + z.shape).copy() if n else z,
+            fn())
+
+    if plan.kind == "uniform":
+        return {"stack": stack(plan.n_layers, inner_cache)}
+    caches = {"groups": {
+        "inner": stack(plan.n_groups,
+                       lambda: stack(plan.inner_per_group, inner_cache)),
+        "outer": stack(plan.n_groups, attn_cache),
+    }}
+    if plan.remainder:
+        caches["rem"] = stack(plan.remainder, inner_cache)
+    return caches

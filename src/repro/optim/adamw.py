@@ -1,0 +1,106 @@
+"""AdamW with fp32 master weights, global-norm clipping, LR schedules.
+
+Pure pytree implementation (no optax dependency).  The optimizer state is
+the big memory consumer at scale; its sharding (ZeRO over pod+data axes) is
+decided by ``sharding.opt_state_shardings`` — this module is sharding-
+agnostic math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def warmup_cosine(cfg: AdamWConfig) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * cos
+
+    return schedule
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_init(params, moments_dtype=jnp.float32):
+    """State: fp32 master copy + first/second moments + step counter.
+
+    ``moments_dtype=bf16`` halves optimizer HBM for 100B+ models (update
+    math still runs in fp32); the master copy always stays fp32.
+    """
+    # force a copy even for fp32 params: master must never alias the model
+    # params (both live in the donated train state)
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                          params)
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, moments_dtype), params)
+    return {"master": master, "mu": zeros,
+            "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, cfg: AdamWConfig,
+                 schedule: Callable | None = None):
+    """Returns (new_params_in_param_dtype_of_master?, new_state, metrics).
+
+    The caller casts master -> param dtype; we return both.
+    """
+    schedule = schedule or warmup_cosine(cfg)
+    step = opt_state["step"] + 1
+    lr = schedule(step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = mu32 / b1c
+        nhat = nu32 / b2c
+        m = m - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                      + cfg.weight_decay * m)
+        return m, mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_m, treedef = jax.tree.flatten(opt_state["master"])
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, m, mu, nu) for g, m, mu, nu
+           in zip(flat_g, flat_m, flat_mu, flat_nu)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "master": new_master,
+        "mu": treedef.unflatten([o[1] for o in out]),
+        "nu": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_master, new_state, metrics

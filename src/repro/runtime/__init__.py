@@ -1,0 +1,5 @@
+from .steps import (init_train_state, make_prefill_step, make_serve_step,
+                    make_train_step)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
+           "init_train_state"]

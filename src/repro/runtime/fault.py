@@ -1,0 +1,87 @@
+"""Fault tolerance around the training loop: restart + elastic rescale.
+
+The real-cluster flow (mirrored by core/scheduler.py's simulation):
+
+1. A host dies -> the gang's collectives fail -> the job process exits.
+2. Scylla re-places the job on the surviving hosts (possibly fewer chips /
+   a different submesh shape) and relaunches the driver.
+3. The driver restores the last checkpoint *against the new mesh's
+   shardings* (checkpoints are sharding-agnostic — see checkpoint/) and
+   continues from the last checkpointed step.
+
+``run_with_failures`` reproduces that flow in-process for tests/examples:
+``FailureInjector`` raises ``SimulatedHostFailure`` at chosen steps; each
+restart may present a different mesh (elastic).  Straggler mitigation at
+the runtime level = per-step wall-time watchdog feeding the scheduler
+(``StepWatchdog``); the placement change itself is the scheduler's call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.runtime.train import TrainConfig, Trainer
+
+
+class SimulatedHostFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    fail_at_steps: tuple = ()
+    fired: set = field(default_factory=set)
+
+    def __call__(self, step: int, metrics):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedHostFailure(f"injected host failure at step {step}")
+
+
+@dataclass
+class StepWatchdog:
+    """Flags straggling steps (gang runs at the slowest host's pace)."""
+
+    threshold: float = 3.0
+    window: int = 20
+    times: list = field(default_factory=list)
+    flagged: list = field(default_factory=list)
+    _last: float = 0.0
+
+    def start(self):
+        self._last = time.monotonic()
+
+    def __call__(self, step: int, metrics):
+        now = time.monotonic()
+        dt = now - self._last
+        self._last = now
+        self.times.append(dt)
+        hist = self.times[-self.window:-1]
+        if len(hist) >= 5:
+            med = sorted(hist)[len(hist) // 2]
+            if dt > self.threshold * med:
+                self.flagged.append((step, dt, med))
+
+
+def run_with_failures(make_trainer: Callable[[int], Trainer], *,
+                      injector: FailureInjector,
+                      max_restarts: int = 5) -> dict:
+    """Run to completion across simulated failures.
+
+    ``make_trainer(attempt)`` builds a fresh Trainer per attempt — the
+    elastic path passes a different mesh/shardings per attempt.  State comes
+    back from the checkpoint directory each time.
+    """
+    attempt = 0
+    while True:
+        trainer = make_trainer(attempt)
+        try:
+            out = trainer.run(on_step=injector)
+            out["restarts"] = attempt
+            return out
+        except SimulatedHostFailure:
+            attempt += 1
+            if attempt > max_restarts:
+                raise

@@ -1,0 +1,113 @@
+"""Batched serving loop: prefill + greedy decode over a fixed slot batch.
+
+The decode step is the ``serve_step`` the dry-run lowers for the decode_32k
+/ long_500k cells.  ``ServeEngine`` adds the minimal production affordances
+around it: a request queue, fixed decode slots (static shapes — no
+recompilation), per-slot stop handling, and slot recycling (continuous-
+batching-lite).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.steps import make_serve_step
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never stops early
+    output: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, batch_slots: int, max_len: int,
+                 mesh=None, cache_shardings=None):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.mesh = mesh
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, dtype=np.int32)
+        self.caches = model.init_cache(batch_slots, max_len)
+        if cache_shardings is not None:
+            self.caches = jax.device_put(self.caches, cache_shardings)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self._step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+        self._decode_one = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        """Wave batching: admit a fresh wave only when every slot is free —
+        all slots then decode in lockstep at one scalar position (static
+        shapes, exact cache indexing).  Prompts are fed token-by-token."""
+        if any(r is not None for r in self.active) or not self.queue:
+            return
+        self.caches = jax.tree.map(lambda c: jnp.zeros_like(c), self.caches)
+        self.pos[:] = 0
+        new_tokens = np.zeros((self.slots, 1), dtype=np.int32)
+        for s in range(self.slots):
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            self.active[s] = req
+            req._feed = deque(req.prompt.tolist())  # type: ignore
+            new_tokens[s, 0] = req._feed.popleft()
+        self.tokens = jnp.asarray(new_tokens)
+
+    def step(self) -> int:
+        """One engine tick = one decode step for every active slot."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        pos = int(self.pos.max())  # lockstep position (wave batching)
+        logits, self.caches = self._decode_one(self.params, self.caches,
+                                               self.tokens, jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        emitted = 0
+        new_tokens = np.asarray(self.tokens).copy()
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            feed = getattr(req, "_feed")
+            if feed:  # still consuming the prompt
+                new_tokens[s, 0] = feed.popleft()
+                continue
+            tok = int(nxt[s])
+            req.output.append(tok)
+            emitted += 1
+            new_tokens[s, 0] = tok
+            if (len(req.output) >= req.max_new_tokens
+                    or tok == req.eos_id
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                self.active[s] = None
+        self.tokens = jnp.asarray(new_tokens)
+        return emitted
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            before = [r for r in self.active if r]
+            self.step()
+            for r in before:
+                if r.done:
+                    finished.append(r)
+            ticks += 1
+        return finished

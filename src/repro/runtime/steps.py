@@ -1,0 +1,100 @@
+"""Step functions: the jit/pjit units the launcher lowers and the scheduler
+places.  One train step (grad-accum microbatching + AdamW), one prefill
+step, one serve (decode) step — these are the "MPI tasks" of DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+
+def init_train_state(model, rng, moments_dtype=jnp.float32) -> dict:
+    params_f32 = model.init(rng)
+    params = jax.tree.map(
+        lambda p: p.astype(model.knobs.param_dtype)
+        if p.dtype == jnp.float32 else p, params_f32)
+    return {"params": params,
+            "opt": adamw_init(params_f32, moments_dtype)}
+
+
+def train_state_specs(model, moments_dtype=jnp.float32) -> dict:
+    """Abstract train state (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_train_state(
+        model, jax.random.PRNGKey(0), moments_dtype))
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, grad_accum: int = 1,
+                    accum_dtype=jnp.float32, grad_shardings=None) -> Callable:
+    """``accum_dtype=bf16`` halves the gradient-accumulator HBM for 100B+
+    models (the AdamW update still runs in fp32).  ``grad_shardings``
+    (typically the ZeRO optimizer-state shardings) pins the accumulator to
+    a data-sharded layout — ZeRO-2: each microbatch's grads reduce-scatter
+    into the shard instead of living replicated across the data axis."""
+    schedule = warmup_cosine(opt_cfg)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(accum_dtype), grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            mbs = jax.tree.map(
+                lambda x: model.knobs.shard_fn("microbatch", x), mbs)
+
+            def _pin(tree):
+                if grad_shardings is None:
+                    return tree
+                return jax.lax.with_sharding_constraint(tree, grad_shardings)
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                      mb)
+                gacc = _pin(jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gacc, g))
+                return (gacc, lacc + l), m
+
+            zeros = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (gacc, lsum), ms = jax.lax.scan(micro, (zeros, jnp.float32(0.0)),
+                                            mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gacc)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+            metrics["loss"] = lsum / grad_accum
+        new_master, new_opt, om = adamw_update(grads, state["opt"], opt_cfg,
+                                               schedule)
+        new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), new_master,
+                                  params)
+        metrics.update(om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, caches
+
+    return prefill_step
+
+
+def make_serve_step(model) -> Callable:
+    def serve_step(params, caches, tokens, pos):
+        logits, new_caches = model.decode_step(params, caches, tokens, pos)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, new_caches
+
+    return serve_step

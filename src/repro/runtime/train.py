@@ -1,0 +1,114 @@
+"""Training loop: grad-accum microbatching, periodic checkpointing, metrics.
+
+``Trainer`` is the per-job driver that Scylla's Task-0 analogue launches
+after placement: it builds (or receives) the job's mesh, shards the state,
+and runs lockstep SPMD steps.  Fault tolerance lives in
+``runtime/fault.py`` (restart/elastic-rescale around this loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, prune_checkpoints, restore, save_checkpoint
+from repro.data import SyntheticDataset
+from repro.models import LM, RuntimeKnobs
+from repro.optim import AdamWConfig
+from repro.runtime.steps import init_train_state, make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    grad_accum: int = 1
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    seed: int = 0
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, model: LM, dataset, tcfg: TrainConfig, *,
+                 mesh=None, state_shardings=None, batch_shardings=None):
+        self.model = model
+        self.dataset = dataset
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.state_shardings = state_shardings
+        self.step_fn = jax.jit(
+            make_train_step(model, tcfg.opt, tcfg.grad_accum),
+            in_shardings=((state_shardings, batch_shardings)
+                          if state_shardings is not None else None),
+            out_shardings=((state_shardings, None)
+                           if state_shardings is not None else None),
+            donate_argnums=(0,))
+        self.state = None
+        self.step = 0
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------- state
+    def init_state(self):
+        self.state = init_train_state(self.model, jax.random.PRNGKey(
+            self.tcfg.seed))
+        if self.state_shardings is not None:
+            self.state = jax.device_put(self.state, self.state_shardings)
+        self.step = 0
+        return self.state
+
+    def maybe_restore(self) -> bool:
+        d = self.tcfg.checkpoint_dir
+        if not d or latest_step(d) is None:
+            return False
+        target = jax.eval_shape(lambda: init_train_state(
+            self.model, jax.random.PRNGKey(self.tcfg.seed)))
+        self.state, meta = restore(d, target, self.state_shardings)
+        self.step = meta["step"]
+        return True
+
+    def save(self):
+        if not self.tcfg.checkpoint_dir:
+            return
+        save_checkpoint(self.tcfg.checkpoint_dir, self.step, self.state,
+                        extra={"arch": self.model.cfg.name})
+        prune_checkpoints(self.tcfg.checkpoint_dir,
+                          self.tcfg.keep_checkpoints)
+
+    # -------------------------------------------------------------- run
+    def run(self, *, until: Optional[int] = None,
+            on_step: Optional[Callable] = None) -> dict:
+        if self.state is None and not self.maybe_restore():
+            self.init_state()
+        until = min(until or self.tcfg.steps, self.tcfg.steps)
+        ctx = self.mesh if self.mesh is not None else _nullctx()
+        with ctx:
+            while self.step < until:
+                batch = self.dataset.batch(self.step)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                self.state, metrics = self.step_fn(self.state, batch)
+                self.step += 1
+                if on_step is not None:
+                    on_step(self.step, metrics)
+                if self.step % self.tcfg.log_every == 0 or self.step == until:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = self.step
+                    self.history.append(m)
+                if (self.tcfg.checkpoint_every
+                        and self.step % self.tcfg.checkpoint_every == 0):
+                    self.save()
+        return {"step": self.step, "history": self.history}
+
+
+class _nullctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,7 @@
+from .pipeline import make_pipelined_forward, pipeline_apply
+from .rules import (batch_shardings, cache_shardings, grad_shardings,
+                    make_shard_fn, opt_state_shardings, param_shardings)
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "opt_state_shardings", "grad_shardings", "make_shard_fn",
+           "pipeline_apply", "make_pipelined_forward"]

@@ -1,0 +1,97 @@
+"""GPipe-style pipeline parallelism over a "stage" mesh axis.
+
+Completes the parallelism menu (DP/TP/EP/SP in rules.py; PP here) for
+depth-dominated models (94-layer qwen3) where TP+DP alone leave the mesh
+under-used.  Implementation is the standard JAX SPMD pipeline: run inside
+``shard_map`` over the stage axis, with layers stacked (n_stages,
+layers_per_stage, ...) so each device holds one stage's slice; activations
+flow stage-to-stage via ``lax.ppermute`` across M + S - 1 ticks (the last
+S - 1 are the drain bubble).
+
+The schedule is expressed with ``jax.lax`` control flow only — it lowers
+to a single fori-style scan whose body contains one stage compute + one
+collective-permute, exactly the schedule a production pipeline runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, microbatches, *,
+                   axis_name: str = "stage"):
+    """Run ``microbatches`` through all pipeline stages.  Call INSIDE
+    shard_map where ``axis_name`` is a manual mesh axis.
+
+    stage_fn:      (params_for_one_stage, x) -> x      (same shape)
+    stage_params:  this device's stage slice (leading dims already local)
+    microbatches:  (M, mb, ...) — identical replica on every stage; stage 0
+                   feeds microbatch t at tick t.
+
+    Returns (M, mb, ...): outputs of the LAST stage in microbatch order
+    (valid on the last stage; other stages hold zeros — callers psum or
+    ppermute them home as needed).
+    """
+    n_stages = jax.lax.psum(1, axis_name)
+    stage_id = jax.lax.axis_index(axis_name)
+    m = microbatches.shape[0]
+    ticks = m + n_stages - 1
+    mb_shape = microbatches.shape[1:]
+
+    fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def tick(carry, t):
+        inflight, outputs = carry
+        # stage 0 injects microbatch t (zeros once the feed is exhausted)
+        feed = jnp.where(
+            t < m,
+            jax.lax.dynamic_index_in_dim(microbatches, jnp.minimum(t, m - 1),
+                                         keepdims=False),
+            jnp.zeros(mb_shape, microbatches.dtype))
+        x = jnp.where(stage_id == 0, feed, inflight)
+        y = stage_fn(stage_params, x)
+        # last stage banks its result for microbatch (t - n_stages + 1)
+        out_idx = jnp.clip(t - n_stages + 1, 0, m - 1)
+        is_valid = jnp.logical_and(stage_id == n_stages - 1,
+                                   t >= n_stages - 1)
+        outputs = jnp.where(
+            is_valid,
+            jax.lax.dynamic_update_index_in_dim(outputs, y, out_idx, 0),
+            outputs)
+        # everyone ships their activation rightwards for the next tick
+        inflight = jax.lax.ppermute(y, axis_name, fwd_perm)
+        return (inflight, outputs), None
+
+    init = (jnp.zeros(mb_shape, microbatches.dtype),
+            jnp.zeros((m,) + mb_shape, microbatches.dtype))
+    (_, outputs), _ = jax.lax.scan(tick, init, jnp.arange(ticks))
+    return outputs
+
+
+def make_pipelined_forward(stage_fn: Callable, mesh: Mesh, *,
+                           axis_name: str = "stage"):
+    """Wrap ``pipeline_apply`` in shard_map on ``mesh``.
+
+    Returns f(stacked_params, microbatches) -> (M, mb, ...) where
+    stacked_params leaves have leading dim n_stages (sharded over the stage
+    axis) and the result is gathered to every stage.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def inner(params, microbatches):
+        out = pipeline_apply(stage_fn, jax.tree.map(lambda p: p[0], params),
+                             microbatches, axis_name=axis_name)
+        # broadcast the last stage's outputs to all stages
+        n = jax.lax.psum(1, axis_name)
+        last = n - 1
+        mask = (jax.lax.axis_index(axis_name) == last).astype(out.dtype)
+        return jax.lax.psum(out * mask, axis_name)
+
+    # P(axis_name) acts as a pytree *prefix*: every param leaf is sharded
+    # on its leading (stage) dim; microbatches are replicated.
+    return shard_map(inner, mesh=mesh, in_specs=(P(axis_name), P()),
+                     out_specs=P(), check_rep=False)

@@ -1,0 +1,71 @@
+"""Config registry: exact assigned dims, param counts vs public sizes."""
+import pytest
+
+from repro.configs import SHAPES, cells, get_config, list_archs, smoke
+
+EXPECTED_BILLIONS = {  # public sizes (±20% tolerance on our counting)
+    "zamba2-2.7b": 2.7, "llava-next-mistral-7b": 7.2, "gemma3-27b": 27.0,
+    "qwen2.5-32b": 32.8, "granite-20b": 20.0, "internlm2-1.8b": 1.8,
+    "mixtral-8x7b": 46.7, "qwen3-moe-235b-a22b": 235.0, "mamba2-1.3b": 1.3,
+    "musicgen-large": 3.3,
+}
+
+
+def test_ten_archs():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_count_matches_public(arch):
+    n = get_config(arch).param_count() / 1e9
+    exp = EXPECTED_BILLIONS[arch]
+    assert abs(n - exp) / exp < 0.20, f"{arch}: {n:.2f}B vs public {exp}B"
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    a = cfg.param_count(active_only=True) / 1e9
+    assert 18 < a < 26  # a22b
+    cfg = get_config("mixtral-8x7b")
+    a = cfg.param_count(active_only=True) / 1e9
+    assert 11 < a < 15  # ~12.9b active
+
+
+def test_assigned_dims_exact():
+    c = get_config("gemma3-27b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (62, 5376, 32, 16, 21504, 262144)
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.num_layers, c.moe.num_experts, c.moe.experts_per_token,
+            c.moe.d_ff) == (94, 128, 8, 1536)
+    c = get_config("mamba2-1.3b")
+    assert c.is_attention_free and c.ssm.d_state == 128
+    c = get_config("granite-20b")
+    assert c.num_kv_heads == 1 and not c.gated_mlp
+
+
+def test_cells_40_with_skips():
+    all_cells = cells()
+    assert len(all_cells) == 40
+    skipped = [c for c in all_cells if c[2]]
+    assert len(skipped) == 6  # pure full-attention archs skip long_500k
+    for arch, shape, _ in skipped:
+        assert shape == "long_500k"
+        assert not get_config(arch).supports_long_context
+
+
+def test_shapes_assigned():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_reduction_preserves_family(arch):
+    full, small = get_config(arch), get_config(arch, smoke=True)
+    assert small.family == full.family
+    assert (small.moe is None) == (full.moe is None)
+    assert (small.ssm is None) == (full.ssm is None)
+    assert small.d_model <= 64 and small.vocab_size <= 256

@@ -1,0 +1,149 @@
+"""Optimizer, compression, checkpoint: unit + integration."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_checkpoint,
+                              prune_checkpoints, restore, save_checkpoint)
+from repro.optim import (AdamWConfig, CompressionState, adamw_init,
+                         adamw_update, compress_error_feedback, global_norm,
+                         warmup_cosine)
+
+
+# ------------------------------------------------------------------ adamw
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0, clip_norm=0.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)({"w": state["master"]["w"]})
+        new_master, state, _ = adamw_update(g, state, cfg)
+    assert float(loss({"w": state["master"]["w"]})) < 1e-2
+
+
+def test_adamw_clipping_bounds_update():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    g = {"w": jnp.full(4, 1e6)}
+    new_master, state, m = adamw_update(g, state, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.max(jnp.abs(new_master["w"]))) < 2.0  # clipped step
+
+
+def test_bf16_moments_track_fp32():
+    cfg = AdamWConfig(lr=0.01, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.ones(16)}
+    s32 = adamw_init(params, jnp.float32)
+    s16 = adamw_init(params, jnp.bfloat16)
+    assert s16["mu"]["w"].dtype == jnp.bfloat16
+    for i in range(20):
+        g = {"w": jnp.sin(jnp.arange(16.0) + i)}
+        m32, s32, _ = adamw_update(g, s32, cfg)
+        m16, s16, _ = adamw_update(g, s16, cfg)
+    np.testing.assert_allclose(np.asarray(m32["w"]), np.asarray(m16["w"]),
+                               atol=5e-3)
+
+
+def test_warmup_cosine_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    sched = warmup_cosine(cfg)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0)
+    assert float(sched(100)) == pytest.approx(0.1, abs=1e-6)
+    assert float(sched(55)) < float(sched(20))
+
+
+# ------------------------------------------------------ int8 compression
+def test_compressed_psum_close_to_exact():
+    n_dev = 4
+    grads = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(n_dev, 32)), jnp.float32)}
+    state = CompressionState.init({"w": grads["w"][0]})
+    states = jax.tree.map(lambda e: jnp.stack([e] * n_dev), state.error)
+
+    def f(g, e):
+        out, ns = compress_error_feedback(
+            {"w": g}, CompressionState({"w": e}), "dp")
+        return out["w"], ns.error["w"]
+
+    out, errs = jax.vmap(f, axis_name="dp")(grads["w"], states["w"])
+    exact = jnp.mean(grads["w"], axis=0)
+    rel = float(jnp.max(jnp.abs(out[0] - exact))
+                / jnp.max(jnp.abs(exact)))
+    assert rel < 0.02
+    # all shards agree exactly (same psum + same scale)
+    for i in range(1, n_dev):
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(out[i]))
+
+
+def test_error_feedback_reduces_bias_over_steps():
+    """With a constant gradient, error feedback makes the *time-averaged*
+    compressed estimate converge to the true value."""
+    g = {"w": jnp.asarray([0.001, 1.0, -0.3], jnp.float32)}
+    state = CompressionState.init(g)
+    acc = jnp.zeros(3)
+    n = 50
+
+    def f(gw, ew):
+        out, ns = compress_error_feedback(
+            {"w": gw}, CompressionState({"w": ew}), "dp")
+        return out["w"], ns.error["w"]
+
+    err = jnp.stack([state.error["w"]])
+    gs = jnp.stack([g["w"]])
+    for _ in range(n):
+        out, err = jax.vmap(f, axis_name="dp")(gs, err)
+        acc = acc + out[0]
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g["w"]),
+                               atol=1e-4)
+
+
+# -------------------------------------------------------------- checkpoint
+def _state():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 10, _state(), extra={"arch": "x"})
+    assert latest_step(d) == 10
+    target = jax.eval_shape(_state)
+    restored, meta = restore(d, target)
+    assert meta["step"] == 10 and meta["extra"]["arch"] == "x"
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(_state()["params"]["w"]))
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state())
+    save_checkpoint(d, 2, _state())
+    assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
+    prune_checkpoints(d, keep=1)
+    assert latest_step(d) == 2
+    assert len(os.listdir(d)) == 1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state())
+    bad = {"params": {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)},
+           "opt": {"step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    with pytest.raises(ValueError):
+        restore(d, bad)

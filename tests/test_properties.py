@@ -1,0 +1,122 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Cluster, ClusterSpec, DRFAllocator, JobSpec,
+                        MinHostPolicy, ResourceSpec, SpreadPolicy)
+from repro.data import MarkovSynthetic, SyntheticDataset, host_shard
+from repro.launch.roofline import _shape_bytes
+from repro.optim import dequantize_int8, quantize_int8
+
+policies = st.sampled_from([SpreadPolicy(), MinHostPolicy()])
+cluster_specs = st.builds(ClusterSpec,
+                          n_pods=st.integers(1, 3),
+                          hosts_per_pod=st.integers(1, 8))
+
+
+@settings(max_examples=50, deadline=None)
+@given(spec=cluster_specs, chips=st.integers(1, 40), policy=policies)
+def test_placement_gang_exact_or_none(spec, chips, policy):
+    """A placement either satisfies the gang exactly within offer limits,
+    or is None when demand exceeds capacity."""
+    c = Cluster(spec)
+    offers = c.advertise()
+    job = JobSpec("j", "internlm2-1.8b", "train_4k", chips=chips)
+    pl = policy.place(job, offers, c)
+    if chips > spec.n_chips:
+        assert pl is None
+        return
+    assert pl is not None
+    assert sum(pl.assignment.values()) == chips
+    free = {o.agent.agent_id: o.available.chips for o in offers}
+    for aid, n in pl.assignment.items():
+        assert 0 < n <= free[aid]
+    c.allocate("j", pl.assignment)  # must not raise
+
+
+@settings(max_examples=30, deadline=None)
+@given(spec=cluster_specs,
+       demands=st.lists(st.integers(1, 12), min_size=1, max_size=6))
+def test_allocate_release_conserves_capacity(spec, demands):
+    c = Cluster(spec)
+    placed = []
+    for i, d in enumerate(demands):
+        pl = MinHostPolicy().place(
+            JobSpec(f"j{i}", "internlm2-1.8b", "train_4k", chips=d),
+            c.advertise(), c)
+        if pl is not None:
+            c.allocate(f"j{i}", pl.assignment)
+            placed.append(f"j{i}")
+    used = c.used().chips
+    assert used <= spec.n_chips
+    for jid in placed:
+        c.release(jid)
+    assert c.used().chips == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 8)),
+                min_size=1, max_size=20))
+def test_drf_shares_bounded_and_conserved(events):
+    total = ResourceSpec(64, 64 * 16e9)
+    drf = DRFAllocator(total)
+    held = {f"f{i}": [] for i in range(3)}
+    for fw, chips in events:
+        name = f"f{fw}"
+        drf.register(name)
+        res = ResourceSpec(chips, chips * 16e9)
+        if sum(r.chips for rs in held.values() for r in rs) + chips <= 64:
+            drf.charge(name, res)
+            held[name].append(res)
+        assert 0.0 <= drf.dominant_share(name) <= 1.0
+    for name, rss in held.items():
+        if name not in drf.accounts:
+            continue
+        for r in rss:
+            drf.credit(name, r)
+        assert drf.dominant_share(name) == pytest.approx(0.0, abs=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                max_size=64))
+def test_int8_quantization_error_bound(xs):
+    x = np.asarray(xs, np.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(dequantize_int8(q, scale) - x)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 1000), seed=st.integers(0, 10),
+       hosts=st.sampled_from([1, 2, 4, 8]))
+def test_data_determinism_and_shard_partition(step, seed, hosts):
+    ds = SyntheticDataset(vocab_size=97, seq_len=16, global_batch=16,
+                          seed=seed)
+    a, b = ds.batch(step)["tokens"], ds.batch(step)["tokens"]
+    assert (a == b).all()  # same (seed, step) -> same batch, any host
+    shards = [host_shard({"tokens": a}, i, hosts)["tokens"] for i in
+              range(hosts)]
+    assert np.concatenate(shards).shape == a.shape
+    assert (np.concatenate(shards) == a).all()
+
+
+def test_markov_dataset_is_learnable_structure():
+    ds = MarkovSynthetic(vocab_size=64, seq_len=128, global_batch=8,
+                         seed=3, noise=0.1)
+    t = ds.batch(0)["tokens"]
+    hits = (t[:, 1:] == (5 * t[:, :-1] + 17) % 64).mean()
+    assert 0.8 < hits < 0.98  # ~1 - noise
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       st.sampled_from(["f32", "bf16", "s32", "pred", "f16"]))
+def test_hlo_shape_bytes_parser(dims, dtype):
+    nbytes = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "f16": 2}[dtype]
+    s = f"{dtype}[{','.join(map(str, dims))}]{{{','.join('0' * len(dims))}}}"
+    expected = nbytes * int(np.prod(dims)) if dims else nbytes
+    assert _shape_bytes(s) == expected

@@ -1,0 +1,180 @@
+"""Scylla core: offers, DRF, policies, gang scheduling, faults."""
+import dataclasses
+
+import pytest
+
+from repro.core import (Cluster, ClusterSpec, DRFAllocator, JobSpec,
+                        MinHostPolicy, ResourceSpec, ScyllaScheduler,
+                        SpreadPolicy, get_policy)
+from repro.core.jobs import JobPhase
+
+SMALL = ClusterSpec(n_pods=2, hosts_per_pod=4)  # 32 chips
+
+
+def _job(jid="j1", chips=8, policy="spread", **kw):
+    return JobSpec(jid, "internlm2-1.8b", "train_4k", chips=chips,
+                   policy=policy, **kw)
+
+
+# ----------------------------------------------------------------- cluster
+def test_advertise_matches_free_capacity():
+    c = Cluster(SMALL)
+    offers = c.advertise()
+    assert len(offers) == 8
+    assert all(o.available.chips == 4 for o in offers)
+    c.allocate("x", {offers[0].agent.agent_id: 3})
+    offers = c.advertise()
+    assert sum(o.available.chips for o in offers) == 29
+
+
+def test_over_allocation_rejected():
+    c = Cluster(SMALL)
+    aid = next(iter(c.hosts))
+    with pytest.raises(ValueError):
+        c.allocate("x", {aid: 5})
+    c.allocate("a", {aid: 3})
+    with pytest.raises(ValueError):
+        c.allocate("b", {aid: 2})
+
+
+def test_fail_host_returns_victims_and_frees():
+    c = Cluster(SMALL)
+    aid = next(iter(c.hosts))
+    c.allocate("a", {aid: 2})
+    victims = c.fail_host(aid)
+    assert victims == ["a"]
+    assert c.hosts[aid].free_chips == 0  # dead hosts offer nothing
+    c.heal_host(aid)
+    assert c.hosts[aid].free_chips == 4
+
+
+# --------------------------------------------------------------------- DRF
+def test_drf_prefers_lowest_dominant_share():
+    drf = DRFAllocator(ResourceSpec(32, 32 * 16e9))
+    drf.register("a")
+    drf.register("b")
+    drf.charge("a", ResourceSpec(8, 8 * 16e9))
+    assert drf.next_framework() == "b"
+    drf.charge("b", ResourceSpec(16, 16 * 16e9))
+    assert drf.next_framework() == "a"
+    drf.credit("b", ResourceSpec(16, 16 * 16e9))
+    assert drf.next_framework() == "b"
+
+
+# ---------------------------------------------------------------- policies
+def test_spread_uses_many_hosts_minhost_few():
+    c = Cluster(SMALL)
+    offers = c.advertise()
+    sp = SpreadPolicy().place(_job(chips=8), offers, c)
+    mh = MinHostPolicy().place(_job(chips=8), offers, c)
+    assert sp.n_hosts == 8  # one chip per host across the cluster
+    assert mh.n_hosts == 2  # 2 full hosts
+    # minhost stays in one pod
+    pods = {o.agent.agent_id: o.agent.pod_id for o in offers}
+    assert len({pods[a] for a in mh.assignment}) == 1
+    assert len({pods[a] for a in sp.assignment}) == 2
+
+
+def test_gang_all_or_nothing():
+    c = Cluster(SMALL)
+    offers = c.advertise()
+    assert SpreadPolicy().place(_job(chips=33), offers, c) is None
+    assert MinHostPolicy().place(_job(chips=33), offers, c) is None
+    pl = MinHostPolicy().place(_job(chips=32), offers, c)
+    assert sum(pl.assignment.values()) == 32
+
+
+def test_placement_respects_offer_capacity():
+    c = Cluster(SMALL)
+    first = next(iter(c.hosts))
+    c.allocate("other", {first: 3})
+    offers = c.advertise()
+    for pol in (SpreadPolicy(), MinHostPolicy(), get_policy("auto")):
+        pl = pol.place(_job(chips=16), offers, c)
+        free = {o.agent.agent_id: o.available.chips for o in offers}
+        assert sum(pl.assignment.values()) == 16
+        for aid, n in pl.assignment.items():
+            assert 0 < n <= free[aid]
+
+
+# --------------------------------------------------------------- scheduler
+def test_co_scheduling_places_multiple_gangs():
+    sched = ScyllaScheduler(Cluster(SMALL), co_schedule=True)
+    for i in range(3):
+        sched.submit(_job(f"j{i}", chips=8), now=0.0)
+    started = sched.try_schedule(0.0)
+    assert len(started) == 3
+    assert sched.cluster.utilization() == 0.75
+
+
+def test_exclusive_mode_one_gang_at_a_time():
+    sched = ScyllaScheduler(Cluster(SMALL), co_schedule=False)
+    for i in range(3):
+        sched.submit(_job(f"j{i}", chips=8), now=0.0)
+    assert len(sched.try_schedule(0.0)) == 1
+    assert len(sched.try_schedule(1.0)) == 0  # blocked while one runs
+    sched.finish("j0", 2.0)
+    assert len(sched.try_schedule(2.0)) == 1
+
+
+def test_drf_order_across_frameworks():
+    sched = ScyllaScheduler(Cluster(SMALL), co_schedule=True)
+    sched.submit(_job("a1", chips=16, framework="alice"), 0.0)
+    sched.submit(_job("b1", chips=8, framework="bob"), 0.0)
+    sched.submit(_job("b2", chips=8, framework="bob"), 0.0)
+    started = sched.try_schedule(0.0)
+    assert {j.spec.job_id for j in started} == {"a1", "b1", "b2"}
+    # alice's share 0.5, bob's 0.5 — both served
+
+
+def test_host_failure_evicts_to_checkpoint_and_requeues():
+    sched = ScyllaScheduler(Cluster(SMALL), co_schedule=True)
+    js = sched.submit(_job("j0", chips=32, checkpoint_every=10), 0.0)
+    sched.try_schedule(0.0)
+    js.steps_done = 57
+    js.last_checkpoint_step = 50
+    victims = sched.on_host_failure(next(iter(sched.cluster.hosts)), 1.0)
+    assert victims[0].spec.job_id == "j0"
+    assert js.phase == JobPhase.PENDING
+    assert js.steps_done == 50  # rolled back to checkpoint
+    assert js.restarts == 1
+    assert sched.cluster.used().chips == 0
+    assert sched.drf.dominant_share("default") == 0.0
+
+
+def test_straggler_detection():
+    sched = ScyllaScheduler(Cluster(SMALL), straggler_threshold=2.0)
+    sched.submit(_job("j0", chips=32), 0.0)
+    sched.try_schedule(0.0)
+    t_fast = sched.step_time_s(sched.running["j0"])
+    aid = next(iter(sched.cluster.hosts))
+    sched.cluster.set_straggler(aid, 3.0)
+    t_slow = sched.step_time_s(sched.running["j0"])
+    assert t_slow == pytest.approx(3.0 * t_fast, rel=1e-6)
+    assert sched.stragglers_to_migrate() == ["j0"]
+
+
+def test_compile_cache_warm_launch():
+    sched = ScyllaScheduler(Cluster(SMALL), compile_cache=True)
+    spec = _job("j0", chips=8)
+    cold = sched.launch_overhead_s(spec)
+    warm = sched.launch_overhead_s(dataclasses.replace(spec, job_id="j1"))
+    assert warm < cold / 5
+
+
+def test_scheduler_recommends_layout_from_profile():
+    """§Perf H3 integrated: small models get the pure-DP layout, big
+    models keep TP — the paper's profile-follows-placement idea applied
+    to mesh-axis assignment."""
+    from repro.core.costmodel import recommended_layout
+
+    assert recommended_layout("internlm2-1.8b") == "dp"
+    assert recommended_layout("mamba2-1.3b") == "dp"
+    assert recommended_layout("qwen3-moe-235b-a22b") == "tp"
+    assert recommended_layout("qwen2.5-32b") == "tp"
+    sched = ScyllaScheduler(Cluster(SMALL), co_schedule=True)
+    sched.submit(_job("small", chips=8), 0.0)
+    sched.submit(JobSpec("big", "gemma3-27b", "train_4k", chips=8), 0.0)
+    sched.try_schedule(0.0)
+    assert sched.running["small"].layout == "dp"
+    assert sched.running["big"].layout == "tp"
