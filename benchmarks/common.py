@@ -20,6 +20,20 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def emit_json(name: str, payload: dict, root: str = "."):
+    """CSV line per scalar metric (same stream the other figures use) plus a
+    BENCH_<name>.json snapshot so trajectories can be tracked across PRs."""
+    for k, v in payload.items():
+        if isinstance(v, (int, float)):
+            # %.6g, not emit()'s %.1f: latency metrics are well under 0.05
+            print(f"{name}_{k},{float(v):.6g},{k}")
+    path = os.path.join(root, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"wrote {path}")
+    return path
+
+
 def save_artifact(name: str, payload):
     os.makedirs("artifacts", exist_ok=True)
     with open(os.path.join("artifacts", name), "w") as f:

@@ -8,7 +8,8 @@ import sys
 import traceback
 
 from . import (container_overhead, cosched_utilization, hp2p_latency,
-               kernel_micro, minife_scaling, policy_comparison)
+               kernel_micro, minife_scaling, policy_comparison,
+               serve_throughput)
 
 BENCHES = [
     ("fig5_container_overhead", container_overhead.run),
@@ -17,6 +18,7 @@ BENCHES = [
     ("fig8_11_cosched_utilization", cosched_utilization.run),
     ("fig12_13_policy_comparison", policy_comparison.run),
     ("kernel_microbench", kernel_micro.run),
+    ("serve_throughput", serve_throughput.run),
 ]
 
 

@@ -1,6 +1,8 @@
 """Batched serving example: train briefly so outputs are non-trivial, then
-serve a queue of requests through the wave-batched ServeEngine (the
-decode path the decode_32k / long_500k dry-run cells lower).
+serve a queue of requests through the continuously-batched ServeEngine (the
+decode path the decode_32k / long_500k dry-run cells lower).  Freed slots
+admit the next request immediately at their own position — no wave barrier
+— and the legacy wave engine is run on the same trace for comparison.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -30,20 +32,26 @@ def main():
     out = tr.run()
     print(f"trained 40 steps, loss -> {out['history'][-1]['loss']:.3f}")
 
-    engine = ServeEngine(model, tr.state["params"], batch_slots=4,
-                         max_len=64)
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    n_req = 8
-    for i in range(n_req):
-        prompt = rng.integers(0, 64, size=rng.integers(1, 5))
-        engine.submit(Request(i, prompt.astype(np.int32),
-                              max_new_tokens=12))
-    done = engine.run()
-    dt = time.time() - t0
-    toks = sum(len(r.output) for r in done)
-    print(f"served {len(done)} requests / {toks} tokens "
-          f"in {dt:.1f}s ({toks / dt:.1f} tok/s on CPU)")
+    def trace(seed=0, n_req=8):
+        rng = np.random.default_rng(seed)
+        return [Request(i, rng.integers(0, 64, size=rng.integers(1, 5))
+                        .astype(np.int32), max_new_tokens=12)
+                for i in range(n_req)]
+
+    stats = {}
+    for mode in ("wave", "continuous"):
+        engine = ServeEngine(model, tr.state["params"], batch_slots=4,
+                             max_len=64, mode=mode)
+        for r in trace():
+            engine.submit(r)
+        t0 = time.time()
+        done = engine.run()
+        dt = time.time() - t0
+        toks = sum(len(r.output) for r in done)
+        stats[mode] = (done, toks)
+        print(f"{mode:10s}: served {len(done)} requests / {toks} tokens "
+              f"in {dt:.1f}s ({toks / dt:.1f} tok/s on CPU)")
+    done, toks = stats["continuous"]
     for r in sorted(done, key=lambda r: r.req_id)[:4]:
         print(f"  req {r.req_id}: {r.prompt.tolist()} -> {r.output}")
     # the Markov structure (next = 5*prev+17 mod 64) should dominate outputs

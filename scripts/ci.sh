@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests, per-arch smoke (fails loudly on any arch
+# error), then the serving benchmark in fast dry mode.  Run from repo root:
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== smoke_all (every arch: fwd/loss/prefill/decode) =="
+python scripts/smoke_all.py
+
+echo "== serve throughput (dry) =="
+python benchmarks/serve_throughput.py --dry
+
+echo "CI OK"

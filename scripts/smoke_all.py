@@ -35,5 +35,14 @@ def run(arch):
 
 if __name__ == "__main__":
     archs = sys.argv[1:] or list_archs()
+    failures = []
     for a in archs:
-        run(a)
+        try:
+            run(a)
+        except Exception as e:  # keep going, fail loudly at the end
+            failures.append((a, e))
+            print(f"{a:28s} FAIL {type(e).__name__}: {e}")
+    if failures:
+        print(f"{len(failures)}/{len(archs)} archs failed:",
+              ", ".join(a for a, _ in failures))
+        sys.exit(1)

@@ -1,0 +1,57 @@
+"""Compatibility shims for jax API drift.
+
+The sharding tests target the post-0.5 explicit-sharding API
+(``jax.sharding.AxisType``, ``make_mesh(..., axis_types=...)``,
+``AbstractMesh(shape, names, axis_types=...)``).  Older jax (e.g. 0.4.x)
+lacks ``AxisType`` and uses a ``tuple[(name, size)]`` AbstractMesh
+constructor; axis types there are simply the default (auto) behavior.
+These helpers accept the new-style arguments and degrade gracefully.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+import jax.sharding
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # stub: callers only pass these through to the helpers
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPE = False
+
+from jax.sharding import AbstractMesh  # present in both lineages
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on any jax version.
+
+    On jax without ``jax.sharding.AxisType`` the axis types are dropped:
+    Auto matches the old default, and Explicit/Manual callers rely only on
+    behavior (shard_map, with_sharding_constraint) that predates the enum.
+    """
+    kw = {} if devices is None else {"devices": devices}
+    if HAS_AXIS_TYPE and axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kw)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def abstract_mesh(axis_shapes, axis_names, *, axis_types=None):
+    """``AbstractMesh`` for either constructor signature."""
+    try:  # new: AbstractMesh(shape, names, axis_types=...)
+        if HAS_AXIS_TYPE and axis_types is not None:
+            return AbstractMesh(tuple(axis_shapes), tuple(axis_names),
+                                axis_types=axis_types)
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:  # old: AbstractMesh(tuple[(name, size), ...])
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))

@@ -46,6 +46,7 @@ class Simulator:
         self.now = 0.0
         self.util_trace: list[tuple[float, float]] = []
         self.events_log: list[tuple[float, str, str]] = []
+        self.events_processed = 0
 
     # ------------------------------------------------------------ seeding
     def _push(self, time: float, kind: str, **payload):
@@ -95,6 +96,10 @@ class Simulator:
             self._reissue_finish(job)
 
     def _record_util(self):
+        """One sample per processed event, taken after all of the event's
+        state changes (run() is the only caller).  Recording inside the
+        handlers too used to emit duplicate/mid-update samples at the same
+        timestamp, skewing the time-weighted average in results()."""
         self.util_trace.append((self.now, self.cluster.utilization()))
 
     # ----------------------------------------------------------- main loop
@@ -107,7 +112,6 @@ class Simulator:
             self.events_log.append((self.now, "start", jid))
         if started:
             self._remodel_running()
-            self._record_util()
 
     def run(self, until: float = float("inf")) -> dict:
         while self._heap and self._heap[0].time <= until:
@@ -129,7 +133,6 @@ class Simulator:
                 self._progress_at.pop(jid, None)
                 self.events_log.append((self.now, "finish", jid))
                 self._remodel_running()
-                self._record_util()
                 self._schedule_round()
             elif ev.kind == "fail_host":
                 self._remodel_running()
@@ -142,7 +145,6 @@ class Simulator:
                     self.events_log.append((self.now, "evict",
                                             job.spec.job_id))
                 self._remodel_running()
-                self._record_util()
                 self._schedule_round()
             elif ev.kind == "heal_host":
                 self.cluster.heal_host(ev.payload["agent_id"])
@@ -162,6 +164,7 @@ class Simulator:
                         self._progress_at.pop(jid, None)
                         self.events_log.append((self.now, "migrate", jid))
                     self._schedule_round()
+            self.events_processed += 1
             self._record_util()
         return self.results()
 

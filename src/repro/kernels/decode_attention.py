@@ -1,11 +1,31 @@
-"""Pallas TPU flash-decode: one query token vs a long KV cache.
+"""Pallas TPU flash-decode: one query token per slot vs a long KV cache.
 
-Decode is memory-bound (the whole KV cache streams HBM->VMEM once); the
+Decode is memory-bound (the live KV prefix streams HBM->VMEM once); the
 kernel's job is to keep that stream dense and do the partial-softmax combine
-in VMEM.  Grid = (batch, q_heads, kv_blocks), kv innermost/sequential with a
-running (max, denom, acc) in scratch — the same online-softmax contract as
-the prefill kernel.  The current decode position arrives via scalar prefetch
-so fully-masked KV blocks issue no work.
+in VMEM.  Two variants share the online-softmax contract of the prefill
+kernel:
+
+* ``decode_attention_tpu`` — single pass.  Grid = (batch, q_heads,
+  kv_blocks), kv innermost/sequential with a running (max, denom, acc)
+  triple in scratch.
+* ``decode_attention_splitk_tpu`` — two phase.  Phase 1 runs ``num_splits``
+  *independent* partial softmaxes over disjoint KV ranges (grid = (batch,
+  q_heads, splits, kv_blocks)), emitting unnormalized accumulators plus the
+  per-split (max, denom) statistics; phase 2 is a small combine kernel over
+  the split axis.  Long-context decode is therefore no longer serialized
+  over one KV stream: the splits carry no sequential dependency, so the
+  compiler is free to overlap their HBM reads.
+
+Ragged kernel contract (the serving hot path relies on this):
+
+* ``pos`` is a **per-sequence position vector** ``(B,)`` delivered via
+  scalar prefetch: slot ``b`` attends keys ``kpos <= pos[b]`` (and, when
+  ``window > 0``, ``pos[b] - kpos < window``).  Every slot of a
+  continuously-batched engine decodes at its own prefix length in one call.
+* ``active`` is a per-slot 0/1 mask (also prefetched).  Inactive slots —
+  and KV blocks fully masked for a short slot — issue **no** MXU work via
+  ``pl.when``; inactive slots write zeros.  A scalar ``pos`` is still
+  accepted (broadcast) for the legacy lockstep path.
 """
 from __future__ import annotations
 
@@ -19,11 +39,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, window: int, block_k: int, scale: float):
+def _normalize_pos(pos, b):
+    """Scalar or (B,) -> (B,) int32 position vector."""
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    return jnp.broadcast_to(pos, (b,))
+
+
+def _block_needed(pos, active, k_start, block_k, window):
+    needed = jnp.logical_and(k_start <= pos, active > 0)
+    if window:
+        needed = jnp.logical_and(needed, k_start + block_k - 1 > pos - window)
+    return needed
+
+
+def _decode_kernel(pos_ref, act_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, window: int, block_k: int,
+                   scale: float):
+    ib = pl.program_id(0)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
-    pos = pos_ref[0]
+    pos = pos_ref[ib]
+    active = act_ref[ib]
 
     @pl.when(ik == 0)
     def _init():
@@ -32,11 +68,8 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     k_start = ik * block_k
-    needed = k_start <= pos
-    if window:
-        needed = jnp.logical_and(needed, k_start + block_k - 1 > pos - window)
 
-    @pl.when(needed)
+    @pl.when(_block_needed(pos, active, k_start, block_k, window))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)  # (1, D)
         k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
@@ -65,30 +98,47 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
-def decode_attention_tpu(q, k_cache, v_cache, pos, *, window=0, block_k=512,
-                         interpret=False):
-    """q (B, H, 1, D); caches (B, KV, S, D); pos scalar int32 -> (B, H, 1, D)."""
+def _prep(q, k_cache, pos, active, block_k):
     b, h, _, d = q.shape
     kv, s = k_cache.shape[1], k_cache.shape[2]
-    g = h // kv
     block_k = min(block_k, s)
     assert s % block_k == 0, (s, block_k)
+    pos = _normalize_pos(pos, b)
+    if active is None:
+        active = (pos >= 0).astype(jnp.int32)
+    else:
+        active = jnp.asarray(active, jnp.int32).reshape(-1)
+        active = jnp.broadcast_to(active, (b,))
+    return b, h, d, kv, s, block_k, pos, active
+
+
+def decode_attention_tpu(q, k_cache, v_cache, pos, *, active=None, window=0,
+                         block_k=512, interpret=False):
+    """q (B, H, 1, D); caches (B, KV, S, D); pos scalar or (B,) int32.
+
+    Returns (B, H, 1, D).  ``active`` (B,) 0/1 gates per-slot work; defaults
+    to ``pos >= 0`` so an engine can park free slots at pos = -1.
+    """
+    b, h, d, kv, s, block_k, pos, active = _prep(q, k_cache, pos, active,
+                                                 block_k)
+    g = h // kv
     nk = s // block_k
     scale = d ** -0.5
     kernel = functools.partial(_decode_kernel, window=window, block_k=block_k,
                                scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, h, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik, pos_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda b_, h_, ik, pos_, act_: (b_, h_, 0, 0)),
             pl.BlockSpec((1, 1, block_k, d),
-                         lambda b_, h_, ik, pos_: (b_, h_ // g, ik, 0)),
+                         lambda b_, h_, ik, pos_, act_: (b_, h_ // g, ik, 0)),
             pl.BlockSpec((1, 1, block_k, d),
-                         lambda b_, h_, ik, pos_: (b_, h_ // g, ik, 0)),
+                         lambda b_, h_, ik, pos_, act_: (b_, h_ // g, ik, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, 1, d),
-                               lambda b_, h_, ik, pos_: (b_, h_, 0, 0)),
+                               lambda b_, h_, ik, pos_, act_: (b_, h_, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
@@ -99,4 +149,146 @@ def decode_attention_tpu(q, k_cache, v_cache, pos, *, window=0, block_k=512,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
         interpret=interpret,
-    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k_cache, v_cache)
+    )(pos, active, q, k_cache, v_cache)
+
+
+# ------------------------------------------------------------------ split-K
+def _splitk_partial_kernel(pos_ref, act_ref, q_ref, k_ref, v_ref,
+                           o_ref, ms_ref, ls_ref, m_ref, l_ref, acc_ref, *,
+                           window: int, block_k: int, split_len: int,
+                           scale: float):
+    ib = pl.program_id(0)
+    isp = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+    pos = pos_ref[ib]
+    active = act_ref[ib]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = isp * split_len + ik * block_k
+
+    @pl.when(_block_needed(pos, active, k_start, block_k, window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = kpos <= pos
+        if window:
+            mask &= pos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        # unnormalized: combine phase rescales by exp(m_i - m*) / sum l
+        o_ref[0, 0, 0] = acc_ref[...]
+        ms_ref[0, 0, 0] = m_ref[...]
+        ls_ref[0, 0, 0] = l_ref[...]
+
+
+def _splitk_combine_kernel(o_parts_ref, ms_ref, ls_ref, o_ref):
+    m = ms_ref[0, 0]      # (ns, 1)
+    l = ls_ref[0, 0]      # (ns, 1)
+    acc = o_parts_ref[0, 0]  # (ns, D)
+    m_star = jnp.max(m)
+    alpha = jnp.exp(m - m_star)  # empty splits: exp(NEG_INF - m*) == 0
+    denom = jnp.maximum(jnp.sum(l * alpha), 1e-30)
+    out = jnp.sum(acc * alpha, axis=0, keepdims=True) / denom
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention_splitk_tpu(q, k_cache, v_cache, pos, *, active=None,
+                                window=0, block_k=512, num_splits=4,
+                                interpret=False):
+    """Two-phase (split-K) ragged flash-decode; same contract as
+    ``decode_attention_tpu``.
+
+    Phase 1 partitions the KV axis into ``num_splits`` disjoint ranges and
+    computes an independent online softmax per range; phase 2 combines the
+    per-split (max, denom, acc) triples.  Use for long contexts where a
+    single sequential KV stream leaves the memory system under-subscribed.
+    """
+    b, h, d, kv, s, block_k, pos, active = _prep(q, k_cache, pos, active,
+                                                 block_k)
+    g = h // kv
+    ns = num_splits
+    assert s % ns == 0, (s, ns)
+    split_len = s // ns
+    block_k = min(block_k, split_len)
+    assert split_len % block_k == 0, (split_len, block_k)
+    nk = split_len // block_k
+    scale = d ** -0.5
+
+    kernel = functools.partial(_splitk_partial_kernel, window=window,
+                               block_k=block_k, split_len=split_len,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, ns, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda b_, h_, isp, ik, pos_, act_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, isp, ik, pos_, act_:
+                         (b_, h_ // g, isp * nk + ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, isp, ik, pos_, act_:
+                         (b_, h_ // g, isp * nk + ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, 1, d),
+                         lambda b_, h_, isp, ik, pos_, act_:
+                         (b_, h_, isp, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, 1),
+                         lambda b_, h_, isp, ik, pos_, act_:
+                         (b_, h_, isp, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, 1),
+                         lambda b_, h_, isp, ik, pos_, act_:
+                         (b_, h_, isp, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    o_parts, ms, ls = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, ns, 1, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, ns, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, ns, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, active, q, k_cache, v_cache)
+
+    return pl.pallas_call(
+        _splitk_combine_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, ns, d), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, ns, 1), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, ns, 1), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(o_parts.reshape(b, h, ns, d), ms.reshape(b, h, ns, 1),
+      ls.reshape(b, h, ns, 1))

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .decode_attention import decode_attention_tpu
+from .decode_attention import decode_attention_splitk_tpu, decode_attention_tpu
 from .flash_attention import flash_attention_tpu
 from .ssd_scan import ssd_chunk_tpu
 
@@ -37,16 +37,29 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,
     return out.swapaxes(1, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
-def decode_attention(q, k_cache, v_cache, pos, *, window=0, block_k=512,
-                     interpret=None):
-    """Model layout: q (B,1,H,D); caches (B,S,KV,D) -> (B,1,H,D)."""
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "num_splits", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, active=None, window=0,
+                     block_k=512, num_splits=1, interpret=None):
+    """Model layout: q (B,1,H,D); caches (B,S,KV,D) -> (B,1,H,D).
+
+    ``pos`` may be a scalar (lockstep) or a (B,) vector (ragged continuous
+    batching); ``active`` (B,) 0/1 gates per-slot work (default pos >= 0).
+    ``num_splits > 1`` selects the two-phase split-K path for long contexts.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     qt = q.swapaxes(1, 2)
     kt = k_cache.swapaxes(1, 2)
     vt = v_cache.swapaxes(1, 2)
-    out = decode_attention_tpu(qt, kt, vt, pos, window=window,
-                               block_k=block_k, interpret=interpret)
+    if num_splits > 1:
+        out = decode_attention_splitk_tpu(qt, kt, vt, pos, active=active,
+                                          window=window, block_k=block_k,
+                                          num_splits=num_splits,
+                                          interpret=interpret)
+    else:
+        out = decode_attention_tpu(qt, kt, vt, pos, active=active,
+                                   window=window, block_k=block_k,
+                                   interpret=interpret)
     return out.swapaxes(1, 2)
 
 

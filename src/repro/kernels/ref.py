@@ -31,21 +31,29 @@ def attention_ref(q, k, v, *, causal=True, window=0):
 
 
 def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0):
-    """q (B,H,1,D); caches (B,KV,S,D) -> (B,H,1,D)."""
+    """q (B,H,1,D); caches (B,KV,S,D) -> (B,H,1,D).
+
+    Ragged: ``pos`` may be a scalar (all slots at one position) or a (B,)
+    vector of per-slot positions; slots with pos < 0 are inactive and
+    return zeros (the serving engine parks free slots at -1).
+    """
     b, h, _, d = q.shape
     kv, s = k_cache.shape[1], k_cache.shape[2]
     g = h // kv
     kx = jnp.repeat(k_cache, g, axis=1).astype(jnp.float32)
     vx = jnp.repeat(v_cache, g, axis=1).astype(jnp.float32)
     sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * d ** -0.5
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     kpos = jnp.arange(s)
-    mask = kpos <= pos
+    mask = kpos[None, :] <= pos[:, None]  # (B, S)
     if window:
-        mask &= pos - kpos < window
-    sc = jnp.where(mask[None, None, None, :], sc, -1e30)
+        mask &= pos[:, None] - kpos[None, :] < window
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
     p = jnp.exp(sc - sc.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
-    return jnp.einsum("bhqk,bhkd->bhqd", p, vx).astype(q.dtype)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+    out = jnp.where((pos >= 0)[:, None, None, None], out, 0.0)
+    return out.astype(q.dtype)
 
 
 def ssd_chunk_ref(x, b, c, dt, cum):

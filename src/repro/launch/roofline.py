@@ -220,7 +220,9 @@ def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> dict:
             # ---------------- FLOPs: dots & convs -------------------------
             if o.op in ("dot", "dot-general"):
                 out_elems = float(np.prod(_shape_dims(o.shape) or [1]))
-                lhs_m = re.match(r"%([\w\.\-]+)", o.rest)
+                # older XLA dumps type each operand ("dot(f32[..] %a, ..."),
+                # newer ones don't — search for the first operand name
+                lhs_m = re.search(r"%([\w\.\-]+)", o.rest)
                 contract = 1.0
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", o.rest)
                 if lhs_m and cm and lhs_m.group(1) in shapes:

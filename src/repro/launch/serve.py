@@ -3,6 +3,9 @@ decode engine over a synthetic request stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch musicgen-large \
         --smoke --requests 8
+
+``--mode continuous`` (default) uses per-slot admission with chunked
+prefill; ``--mode wave`` runs the legacy lockstep baseline.
 """
 from __future__ import annotations
 
@@ -26,13 +29,17 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--mode", choices=("continuous", "wave"),
+                    default="continuous")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, batch_slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len, mode=args.mode,
+                         prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(1, 6))
@@ -43,8 +50,8 @@ def main():
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.output) for r in done)
-    print(f"arch={args.arch} served {len(done)} requests, {toks} tokens "
-          f"in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+    print(f"arch={args.arch} mode={args.mode} served {len(done)} requests, "
+          f"{toks} tokens in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
 
 
 if __name__ == "__main__":

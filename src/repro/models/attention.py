@@ -151,28 +151,48 @@ def _flash_causal_recursive(q, k, v, *, q_chunk, q_offset, depth=4):
 
 
 def decode_attention_xla(q, k_cache, v_cache, pos, *, window=0):
-    """One-token decode.  q (B,1,H,D); caches (B,S,KV,D); pos scalar.
+    """One-token decode.  q (B,1,H,D); caches (B,S,KV,D).
 
     Reads the whole cache (O(S)); positions beyond ``pos`` and outside the
-    window are masked.
+    window are masked.  Ragged: ``pos`` may be a scalar (lockstep) or a
+    (B,) vector of per-slot prefix lengths — the XLA mirror of the Pallas
+    per-slot kernel contract.  Slots with pos < 0 are inactive and return
+    zeros.
     """
     b, _, h, d = q.shape
     s, kv = k_cache.shape[1], k_cache.shape[2]
     g = h // kv
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     qg = q.reshape(b, 1, kv, g, d)
     scores = _grouped_scores(qg, k_cache)  # (B,KV,G,1,S)
     kpos = jnp.arange(s)
-    mask = kpos <= pos
+    mask = kpos[None, :] <= pos[:, None]  # (B, S)
     if window:
-        mask &= pos - kpos < window
-    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+        mask &= pos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = _grouped_context(probs, v_cache)
-    return out.reshape(b, 1, h, d)
+    out = _grouped_context(probs, v_cache)  # (B,1,KV,G,D)
+    out = jnp.where((pos >= 0)[:, None, None, None, None], out, 0.0)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
 def cache_update(k_cache, v_cache, k_new, v_new, pos):
-    """Insert (B,1,KV,D) at position ``pos`` of (B,S,KV,D) caches."""
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
-    return k_cache, v_cache
+    """Insert (B,1,KV,D) at position ``pos`` of (B,S,KV,D) caches.
+
+    ``pos`` scalar writes all slots at one position (lockstep decode); a
+    (B,) vector writes each slot at its own position (ragged decode).
+    Negative positions clamp to 0 — an inactive slot's garbage write lands
+    at index 0 and is overwritten when the slot is next admitted.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    k_new = k_new.astype(k_cache.dtype)
+    v_new = v_new.astype(v_cache.dtype)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, pos,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, pos,
+                                                      axis=1)
+        return k_cache, v_cache
+    upd = jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    return upd(k_cache, k_new, pos), upd(v_cache, v_new, pos)

@@ -12,7 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from .layers import chunked_ce_loss, embed, embedding_init, rmsnorm, rmsnorm_init, unembed
-from .transformer import apply_blocks, apply_blocks_decode, init_blocks, init_cache
+from .transformer import (apply_blocks, apply_blocks_decode,
+                          apply_blocks_prefill_chunk, init_blocks, init_cache,
+                          supports_chunked_prefill)
 
 MOE_LB_COEF = 0.01
 MOE_Z_COEF = 1e-3
@@ -34,6 +36,7 @@ class RuntimeKnobs:
     remat: bool = True
     use_pallas: bool = False  # Pallas kernels (TPU); XLA path otherwise
     causal_skip: bool = False  # unrolled causal block-skip attention (H2)
+    decode_splits: int = 1  # >1: split-K two-phase flash-decode (long ctx)
     shard_fn: Callable = _identity_shard  # sharding-constraint hook
 
     def with_(self, **kw) -> "RuntimeKnobs":
@@ -110,13 +113,37 @@ class LM:
 
     # ------------------------------------------------------------- decode
     def decode_step(self, params, caches, tokens, pos):
-        """tokens (B,1) int32, pos scalar -> (logits (B,V), new caches)."""
+        """tokens (B,1) int32 -> (logits (B,V), new caches).
+
+        ``pos`` is a scalar (all slots in lockstep) or a (B,) vector of
+        per-slot positions (ragged continuous batching); slots parked at
+        pos = -1 are inactive and produce don't-care logits.
+        """
         x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
         x, new_caches = apply_blocks_decode(params["blocks"], x, caches, pos,
                                             cfg=self.cfg, knobs=self.knobs)
         x = rmsnorm(params["final_norm"], x)
         logits = unembed(params["embed"], x)[:, 0, :]
         return logits.astype(jnp.float32), new_caches
+
+    def prefill_chunk_step(self, params, caches, tokens, slot, offset):
+        """Chunked prefill: one slot's prompt chunk.
+
+        tokens (1,C) int32 at absolute positions offset..offset+C-1; writes
+        the chunk's K/V into ``caches`` at (slot, offset) and returns
+        (chunk logits (C,V) fp32, new caches).  The engine reads the logits
+        row of the last real prompt token to seed decode.
+        """
+        x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
+        x, new_caches = apply_blocks_prefill_chunk(
+            params["blocks"], x, caches, slot, offset, cfg=self.cfg,
+            knobs=self.knobs)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)[0]
+        return logits.astype(jnp.float32), new_caches
+
+    def supports_chunked_prefill(self) -> bool:
+        return supports_chunked_prefill(self.cfg)
 
     # -------------------------------------------------------------- cache
     def init_cache(self, batch: int, max_len: int):

@@ -173,29 +173,65 @@ def _apply_attn_block(p, x, positions, *, cfg, window, knobs, collect_cache,
     return x, aux, cache
 
 
+def _ffn_out(p, h2, ffn, *, cfg, shard_fn):
+    """Inference-time FFN tail shared by the cached block bodies."""
+    if ffn == "moe":
+        out, _ = moe_ffn(p["moe"], h2, cfg.moe, train=False, shard_fn=shard_fn)
+        return out
+    if ffn == "mlp":
+        return mlp(p["mlp"], h2, cfg.gated_mlp)
+    return jnp.zeros_like(h2)
+
+
 def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
                              shard_fn):
     b = x.shape[0]
     h = rmsnorm(p["ln1"], x)
-    positions = jnp.full((b, 1), pos)
+    pos = jnp.asarray(pos, jnp.int32)  # scalar (lockstep) or (B,) (ragged)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim
+                                 else pos, (b, 1))
     q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
     kc, vc = attn.cache_update(cache["k"], cache["v"], k_new, v_new, pos)
     if knobs.use_pallas:
         from repro.kernels import decode_attention as _pallas_decode
 
         blk = min(512, kc.shape[1])
-        ctx = _pallas_decode(q, kc, vc, pos, window=window, block_k=blk)
+        ctx = _pallas_decode(q, kc, vc, pos, window=window, block_k=blk,
+                             num_splits=knobs.decode_splits)
     else:
         ctx = attn.decode_attention_xla(q, kc, vc, pos, window=window)
     x = x + attn.attn_output(p["attn"], ctx)
     h2 = rmsnorm(p["ln2"], x)
-    if ffn == "moe":
-        out, _ = moe_ffn(p["moe"], h2, cfg.moe, train=False, shard_fn=shard_fn)
-    elif ffn == "mlp":
-        out = mlp(p["mlp"], h2, cfg.gated_mlp)
-    else:
-        out = jnp.zeros_like(h2)
-    return x + out, {"k": kc, "v": vc}
+    return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), \
+        {"k": kc, "v": vc}
+
+
+def _apply_attn_block_prefill_chunk(p, x, cache, slot, offset, *, cfg, window,
+                                    knobs, ffn, shard_fn):
+    """One slot's prompt chunk: x (1,C,dm) at absolute positions
+    offset..offset+C-1.  Writes the chunk's K/V into cache[slot] in place,
+    then runs blocked flash attention of the chunk against the slot's full
+    prefix (stale cache beyond offset+C is causally masked)."""
+    c = x.shape[1]
+    h = rmsnorm(p["ln1"], x)
+    positions = offset + jnp.arange(c)[None, :]
+    q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(cache["k"],
+                                      k_new.astype(cache["k"].dtype),
+                                      (slot, offset, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"],
+                                      v_new.astype(cache["v"].dtype),
+                                      (slot, offset, 0, 0))
+    k_slot = jax.lax.dynamic_slice_in_dim(kc, slot, 1, axis=0)
+    v_slot = jax.lax.dynamic_slice_in_dim(vc, slot, 1, axis=0)
+    ctx = attn.flash_attention_xla(q, k_slot, v_slot, causal=True,
+                                   window=window,
+                                   q_chunk=min(knobs.q_chunk, c),
+                                   q_offset=offset)
+    x = x + attn.attn_output(p["attn"], ctx)
+    h2 = rmsnorm(p["ln2"], x)
+    return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), \
+        {"k": kc, "v": vc}
 
 
 def _apply_ssm_block(p, x, *, cfg, collect_cache, shard_fn,
@@ -287,23 +323,21 @@ def apply_blocks(blocks, x, positions, *, cfg, knobs, mode: str):
 
 
 # ============================================================ decode apply
-def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs):
+def _walk_plan_cached(blocks, x, caches, *, cfg, inner_fn, outer_fn):
+    """Shared plan walker for the cached paths (decode and chunked
+    prefill): thread x and per-layer caches through the plan's stacks.
+
+    inner_fn(p, x, cache, window) and outer_fn(p, x, cache, window, ffn)
+    each return (x, new_cache); ffn is pre-resolved ("mlp" for shared
+    outer blocks).
+    """
     plan = build_plan(cfg)
     ffn = _ffn_kind(cfg)
-    shard_fn = knobs.shard_fn
-
-    def inner_body(p, xx, cache, window):
-        if plan.inner_kind == "attn":
-            return _apply_attn_block_decode(p, xx, cache, pos, cfg=cfg,
-                                            window=window, knobs=knobs,
-                                            ffn=ffn, shard_fn=shard_fn)
-        return _apply_ssm_block_decode(p, xx, cache, cfg=cfg, shard_fn=shard_fn)
 
     def scan_stack(stack, cstack, xx, window):
         def body(c, inp):
             p, cache = inp
-            c, new = inner_body(p, c, cache, window)
-            return c, new
+            return inner_fn(p, c, cache, window)
         return jax.lax.scan(body, xx, (stack, cstack))
 
     if plan.kind == "uniform":
@@ -316,10 +350,8 @@ def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs):
         xx, new_inner = scan_stack(xs["inner"], gcache["inner"], xx,
                                    plan.inner_window)
         op = blocks["outer"] if plan.outer_shared else xs["outer"]
-        xx, new_outer = _apply_attn_block_decode(
-            op, xx, gcache["outer"], pos, cfg=cfg, window=plan.outer_window,
-            knobs=knobs, ffn="mlp" if plan.outer_shared else ffn,
-            shard_fn=shard_fn)
+        xx, new_outer = outer_fn(op, xx, gcache["outer"], plan.outer_window,
+                                 "mlp" if plan.outer_shared else ffn)
         return xx, {"inner": new_inner, "outer": new_outer}
 
     xs = {"inner": blocks["inner"]}
@@ -332,6 +364,62 @@ def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs):
                                 plan.inner_window)
         new_caches["rem"] = new_rem
     return x, new_caches
+
+
+def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs):
+    plan = build_plan(cfg)
+    ffn = _ffn_kind(cfg)
+    shard_fn = knobs.shard_fn
+
+    def inner_fn(p, xx, cache, window):
+        if plan.inner_kind == "attn":
+            return _apply_attn_block_decode(p, xx, cache, pos, cfg=cfg,
+                                            window=window, knobs=knobs,
+                                            ffn=ffn, shard_fn=shard_fn)
+        return _apply_ssm_block_decode(p, xx, cache, cfg=cfg,
+                                       shard_fn=shard_fn)
+
+    def outer_fn(p, xx, cache, window, offn):
+        return _apply_attn_block_decode(p, xx, cache, pos, cfg=cfg,
+                                        window=window, knobs=knobs, ffn=offn,
+                                        shard_fn=shard_fn)
+
+    return _walk_plan_cached(blocks, x, caches, cfg=cfg, inner_fn=inner_fn,
+                             outer_fn=outer_fn)
+
+
+# ==================================================== chunked prefill apply
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunked prefill needs every layer's prefix state to be recoverable
+    from the KV cache alone; SSM/hybrid plans carry conv + SSD state across
+    chunk boundaries and fall back to token feeding."""
+    return build_plan(cfg).inner_kind == "attn"
+
+
+def apply_blocks_prefill_chunk(blocks, x, caches, slot, offset, *, cfg,
+                               knobs):
+    """Run ONE slot's prompt chunk x (1,C,dm) through all layers, writing
+    each layer's K/V into ``caches`` at (slot, offset) in place.  Returns
+    (hidden (1,C,dm), new caches).  Attention-only plans."""
+    plan = build_plan(cfg)
+    if plan.inner_kind != "attn":
+        raise NotImplementedError(
+            f"chunked prefill unsupported for family={cfg.family!r}")
+    ffn = _ffn_kind(cfg)
+    shard_fn = knobs.shard_fn
+
+    def inner_fn(p, xx, cache, window):
+        return _apply_attn_block_prefill_chunk(
+            p, xx, cache, slot, offset, cfg=cfg, window=window, knobs=knobs,
+            ffn=ffn, shard_fn=shard_fn)
+
+    def outer_fn(p, xx, cache, window, offn):
+        return _apply_attn_block_prefill_chunk(
+            p, xx, cache, slot, offset, cfg=cfg, window=window, knobs=knobs,
+            ffn=offn, shard_fn=shard_fn)
+
+    return _walk_plan_cached(blocks, x, caches, cfg=cfg, inner_fn=inner_fn,
+                             outer_fn=outer_fn)
 
 
 # ============================================================== cache init

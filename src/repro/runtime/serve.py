@@ -1,14 +1,35 @@
-"""Batched serving loop: prefill + greedy decode over a fixed slot batch.
+"""Batched serving loop: continuous batching over a fixed slot batch.
 
 The decode step is the ``serve_step`` the dry-run lowers for the decode_32k
-/ long_500k cells.  ``ServeEngine`` adds the minimal production affordances
-around it: a request queue, fixed decode slots (static shapes — no
-recompilation), per-slot stop handling, and slot recycling (continuous-
-batching-lite).
+/ long_500k cells.  ``ServeEngine`` adds the production affordances around
+it: a request queue, fixed decode slots (static shapes — no recompilation),
+per-slot stop handling, and per-slot admission.
+
+Admission policy (``mode="continuous"``, the default)
+-----------------------------------------------------
+Any freed slot immediately admits the next queued request at its *own*
+position — there is no wave barrier.  The decode step takes a per-slot
+position vector ``pos[B]`` (free slots parked at -1), so every slot attends
+its own prefix length in one ragged kernel call and work is proportional to
+the tokens actually alive, not ``max_len * wave``.  Prompts are consumed by
+**chunked prefill** where the architecture allows it (attention-only
+plans): the prompt runs through the stack in (1, C) blocks that write the
+KV cache in place — one step per C prompt tokens instead of one step per
+token.  SSM/hybrid plans (conv + SSD state crosses chunk boundaries) fall
+back to per-slot token feeding, still without a wave barrier; their slot
+state is zeroed on admission since SSM state is not masked by position.
+
+``mode="wave"`` keeps the legacy lockstep engine — admit a fresh wave only
+when every slot is free, all slots decode at one scalar position, prompts
+fed token-by-token — as the baseline ``benchmarks/serve_throughput.py``
+measures continuous batching against (the serving analogue of the paper's
+exclusive, non-co-scheduled mode).
+
+All step functions keep static shapes and donate the caches, so each mode
+compiles exactly once per (slots, max_len) and decodes in place.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
@@ -17,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.steps import make_serve_step
+from repro.runtime.steps import make_prefill_chunk_step, make_serve_step
 
 
 @dataclass
@@ -32,26 +53,134 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int, max_len: int,
+                 mode: str = "continuous", prefill_chunk: int = 32,
                  mesh=None, cache_shardings=None):
+        assert mode in ("continuous", "wave"), mode
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
+        self.mode = mode
         self.mesh = mesh
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * batch_slots
-        self.pos = np.zeros(batch_slots, dtype=np.int32)
+        self.pos = np.full(batch_slots, -1, dtype=np.int32)
         self.caches = model.init_cache(batch_slots, max_len)
         if cache_shardings is not None:
             self.caches = jax.device_put(self.caches, cache_shardings)
-        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.tokens = np.zeros((batch_slots, 1), dtype=np.int32)
+        self._finished: list[Request] = []
+        self._admit_emitted = 0  # tokens emitted by chunked prefill
         self._step = jax.jit(make_serve_step(model), donate_argnums=(1,))
         self._decode_one = jax.jit(model.decode_step, donate_argnums=(1,))
+        # chunked prefill: one compiled (1, C) step reused for every slot
+        # and offset; C rounded down to a divisor of max_len so padded
+        # chunk writes never clamp out of bounds.
+        self.chunked = (mode == "continuous" and prefill_chunk > 1
+                        and model.supports_chunked_prefill())
+        c = max(1, min(prefill_chunk, max_len))
+        while max_len % c:
+            c -= 1
+        self.prefill_chunk = c
+        if self.chunked:
+            self._prefill = jax.jit(make_prefill_chunk_step(model),
+                                    donate_argnums=(1,))
+        # SSM/hybrid state is not position-masked: zero a slot on admission
+        self._needs_reset = model.cfg.family in ("ssm", "hybrid")
+        if self._needs_reset:
+            self._reset = self._make_slot_reset(model, max_len)
+
+    @staticmethod
+    def _make_slot_reset(model, max_len):
+        """Zero one slot's cache state.  The batch axis of each cache leaf
+        is found by diffing abstract cache shapes for two batch sizes (leaf
+        layouts vary: stacked layer axes lead, SSM leaves differ from KV)."""
+        s1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
+        s2 = jax.eval_shape(lambda: model.init_cache(2, max_len))
+        axes = jax.tree.map(
+            lambda a, b: next(i for i, (x, y) in enumerate(zip(a.shape,
+                                                               b.shape))
+                              if x != y), s1, s2)
+
+        def reset(caches, slot):
+            def zero(c, ax):
+                keep = jnp.arange(c.shape[ax]) != slot
+                shape = [1] * c.ndim
+                shape[ax] = c.shape[ax]
+                return c * keep.reshape(shape).astype(c.dtype)
+
+            return jax.tree.map(zero, caches, axes)
+
+        return jax.jit(reset, donate_argnums=(0,))
 
     def submit(self, req: Request):
+        if not 0 < len(req.prompt) < self.max_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} outside [1, "
+                f"{self.max_len - 1}] for max_len={self.max_len}")
         self.queue.append(req)
 
-    def _admit(self):
+    # ------------------------------------------------------------ admission
+    def _finish(self, s: int):
+        req = self.active[s]
+        req.done = True
+        self.active[s] = None
+        self.pos[s] = -1
+        self.tokens[s, 0] = 0
+        self._finished.append(req)
+
+    def _admit_continuous(self):
+        """Per-slot admission: every free slot takes the next request now."""
+        for s in range(self.slots):
+            while self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                if self._needs_reset:
+                    self.caches = self._reset(self.caches, jnp.int32(s))
+                if self.chunked:
+                    self._prefill_slot(s, req)
+                    # prefill already produced the first token; the request
+                    # may complete before a single decode tick runs, in
+                    # which case the freed slot admits again immediately
+                    self._maybe_stop(s)
+                else:
+                    req._feed = deque(req.prompt.tolist())  # type: ignore
+                    self.tokens[s, 0] = req._feed.popleft()
+                    self.pos[s] = 0
+
+    def _prefill_slot(self, s: int, req: Request):
+        """Run the slot's prompt through the stack in (1, C) chunks,
+        writing the KV cache in place; the last real token's logits seed
+        decode at pos = prompt_len."""
+        c = self.prefill_chunk
+        prompt = np.asarray(req.prompt, np.int32)
+        p = len(prompt)
+        n_chunks = max(1, -(-p // c))
+        padded = np.zeros(n_chunks * c, np.int32)
+        padded[:p] = prompt
+        req._feed = deque()  # type: ignore
+        nxt = None
+        for ci in range(n_chunks):
+            chunk = jnp.asarray(padded[None, ci * c:(ci + 1) * c])
+            nxt, self.caches = self._prefill(self.params, self.caches, chunk,
+                                             jnp.int32(s), jnp.int32(ci * c))
+        tok = int(np.asarray(nxt)[(p - 1) - (n_chunks - 1) * c])
+        self.pos[s] = p
+        self.tokens[s, 0] = tok
+        req.output.append(tok)
+        self._admit_emitted += 1
+
+    def _maybe_stop(self, s: int) -> bool:
+        req = self.active[s]
+        if (len(req.output) >= req.max_new_tokens
+                or (req.output and req.output[-1] == req.eos_id)
+                or self.pos[s] >= self.max_len - 1):
+            self._finish(s)
+            return True
+        return False
+
+    # ----------------------------------------------------------- wave mode
+    def _admit_wave(self):
         """Wave batching: admit a fresh wave only when every slot is free —
         all slots then decode in lockstep at one scalar position (static
         shapes, exact cache indexing).  Prompts are fed token-by-token."""
@@ -59,55 +188,82 @@ class ServeEngine:
             return
         self.caches = jax.tree.map(lambda c: jnp.zeros_like(c), self.caches)
         self.pos[:] = 0
-        new_tokens = np.zeros((self.slots, 1), dtype=np.int32)
+        self.tokens[:] = 0
         for s in range(self.slots):
             if not self.queue:
                 break
             req = self.queue.popleft()
             self.active[s] = req
             req._feed = deque(req.prompt.tolist())  # type: ignore
-            new_tokens[s, 0] = req._feed.popleft()
-        self.tokens = jnp.asarray(new_tokens)
+            self.tokens[s, 0] = req._feed.popleft()
 
+    # ------------------------------------------------------------ stepping
     def step(self) -> int:
-        """One engine tick = one decode step for every active slot."""
-        self._admit()
+        """One engine tick = one decode step for every live slot."""
+        if self.mode == "wave":
+            return self._step_wave()
+        return self._step_continuous()
+
+    def _step_continuous(self) -> int:
+        self._admit_emitted = 0
+        self._admit_continuous()
+        emitted = self._admit_emitted  # first tokens from chunked prefill
+        if not any(r is not None for r in self.active):
+            return emitted
+        pos = jnp.asarray(self.pos)
+        nxt_dev, self.caches = self._step(self.params, self.caches,
+                                          jnp.asarray(self.tokens), pos)
+        nxt = np.asarray(nxt_dev)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            feed = getattr(req, "_feed")
+            if feed:  # still consuming the prompt (token-feed path)
+                self.tokens[s, 0] = feed.popleft()
+                continue
+            tok = int(nxt[s, 0])
+            req.output.append(tok)
+            emitted += 1
+            self.tokens[s, 0] = tok
+            self._maybe_stop(s)
+        return emitted
+
+    def _step_wave(self) -> int:
+        self._admit_wave()
         if not any(r is not None for r in self.active):
             return 0
         pos = int(self.pos.max())  # lockstep position (wave batching)
         logits, self.caches = self._decode_one(self.params, self.caches,
-                                               self.tokens, jnp.int32(pos))
+                                               jnp.asarray(self.tokens),
+                                               jnp.int32(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
         emitted = 0
-        new_tokens = np.asarray(self.tokens).copy()
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             self.pos[s] += 1
             feed = getattr(req, "_feed")
             if feed:  # still consuming the prompt
-                new_tokens[s, 0] = feed.popleft()
+                self.tokens[s, 0] = feed.popleft()
                 continue
             tok = int(nxt[s])
             req.output.append(tok)
             emitted += 1
-            new_tokens[s, 0] = tok
+            self.tokens[s, 0] = tok
             if (len(req.output) >= req.max_new_tokens
                     or tok == req.eos_id
                     or self.pos[s] >= self.max_len - 1):
                 req.done = True
                 self.active[s] = None
-        self.tokens = jnp.asarray(new_tokens)
+                self._finished.append(req)
         return emitted
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
-        finished: list[Request] = []
         ticks = 0
-        while (self.queue or any(self.active)) and ticks < max_ticks:
-            before = [r for r in self.active if r]
+        while ((self.queue or any(r is not None for r in self.active))
+               and ticks < max_ticks):
             self.step()
-            for r in before:
-                if r.done:
-                    finished.append(r)
             ticks += 1
+        finished, self._finished = self._finished, []
         return finished

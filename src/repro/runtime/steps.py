@@ -92,9 +92,26 @@ def make_prefill_step(model) -> Callable:
 
 
 def make_serve_step(model) -> Callable:
+    """Greedy decode step.  ``pos`` is a scalar (lockstep wave batching) or
+    a (B,) vector of per-slot positions (ragged continuous batching; free
+    slots parked at -1 issue no attention work on the Pallas path)."""
     def serve_step(params, caches, tokens, pos):
         logits, new_caches = model.decode_step(params, caches, tokens, pos)
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return next_tokens, new_caches
 
     return serve_step
+
+
+def make_prefill_chunk_step(model) -> Callable:
+    """Chunked prefill step: run ONE slot's prompt chunk (1, C) at absolute
+    offset through the stack, writing K/V into the batched cache in place.
+    Returns (next-token int32 per chunk row (C,), new caches) so the engine
+    can read the row of the last real prompt token."""
+    def prefill_chunk_step(params, caches, tokens, slot, offset):
+        logits, new_caches = model.prefill_chunk_step(params, caches, tokens,
+                                                      slot, offset)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_caches
+
+    return prefill_chunk_step

@@ -1,0 +1,211 @@
+"""Ragged continuous-batching decode: per-slot kernel + split-K parity
+(interpret mode) against the ragged XLA/jnp references, chunked prefill
+parity, and continuous-vs-wave engine equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.decode_attention import (decode_attention_splitk_tpu,
+                                            decode_attention_tpu)
+from repro.kernels.ref import decode_attention_ref
+from repro.models import LM, RuntimeKnobs
+from repro.models.attention import decode_attention_xla
+from repro.runtime.serve import Request, ServeEngine
+
+RNG = np.random.default_rng(7)
+
+
+def arr(*s):
+    return jnp.asarray(RNG.normal(size=s), jnp.float32)
+
+
+def _qkv(b, h, kv, s, d):
+    return arr(b, h, 1, d), arr(b, kv, s, d), arr(b, kv, s, d)
+
+
+# adversarial per-slot positions: zero, block boundaries (+-1), max_len-1,
+# and an inactive slot parked at -1
+POS_CASES = [
+    np.array([0, 15, 16, 63], np.int32),
+    np.array([17, 31, 32, 62], np.int32),
+    np.array([-1, 0, 47, 63], np.int32),
+]
+
+
+@pytest.mark.parametrize("g", [1, 2, 4])
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("pos", POS_CASES)
+def test_ragged_kernel_matches_ref(g, window, pos):
+    b, kv, d, s = 4, 2, 16, 64
+    h = kv * g
+    q, k, v = _qkv(b, h, kv, s, d)
+    ref = decode_attention_ref(q, k, v, pos, window=window)
+    out = decode_attention_tpu(q, k, v, pos, window=window, block_k=16,
+                               interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("num_splits", [2, 4])
+@pytest.mark.parametrize("pos", POS_CASES)
+def test_splitk_kernel_matches_ref(g, window, num_splits, pos):
+    b, kv, d, s = 4, 2, 16, 64
+    h = kv * g
+    q, k, v = _qkv(b, h, kv, s, d)
+    ref = decode_attention_ref(q, k, v, pos, window=window)
+    out = decode_attention_splitk_tpu(q, k, v, pos, window=window, block_k=16,
+                                      num_splits=num_splits, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+def test_scalar_pos_still_supported():
+    b, kv, g, d, s = 2, 2, 2, 16, 64
+    q, k, v = _qkv(b, kv * g, kv, s, d)
+    ref = decode_attention_ref(q, k, v, 30)
+    out = decode_attention_tpu(q, k, v, jnp.int32(30), block_k=16,
+                               interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+def test_xla_reference_is_ragged_and_masks_inactive():
+    """The XLA mirror (model layout) matches the jnp oracle per slot and
+    zeroes inactive slots."""
+    b, kv, g, d, s = 4, 2, 2, 16, 64
+    h = kv * g
+    q, k, v = _qkv(b, h, kv, s, d)
+    pos = np.array([-1, 0, 31, 63], np.int32)
+    ref = decode_attention_ref(q, k, v, pos, window=4)
+    out = decode_attention_xla(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), pos, window=4)
+    assert float(jnp.max(jnp.abs(out.swapaxes(1, 2) - ref))) < 1e-5
+    assert float(jnp.max(jnp.abs(out[0]))) == 0.0
+
+
+def _tiny_model(arch="internlm2-1.8b", **extra):
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              **(extra or dict(num_layers=2, vocab_size=64)))
+    return LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+
+
+def test_ragged_decode_step_matches_per_slot_scalar_decode():
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 3, 32
+    toks = jnp.asarray(RNG.integers(0, 64, size=(b, 1)), jnp.int32)
+    pos = jnp.asarray([0, 3, 31 - 1], jnp.int32)
+    ragged, _ = jax.jit(model.decode_step)(params, model.init_cache(b, s),
+                                           toks, pos)
+    for i in range(b):
+        one, _ = jax.jit(model.decode_step)(params, model.init_cache(1, s),
+                                            toks[i:i + 1],
+                                            jnp.int32(int(pos[i])))
+        assert float(jnp.max(jnp.abs(one[0] - ragged[i]))) < 1e-4
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "gemma3-27b"])
+def test_chunked_prefill_matches_full_prefill(arch):
+    model = _tiny_model(arch, vocab_size=64) if arch == "gemma3-27b" \
+        else _tiny_model(arch)
+    params = model.init(jax.random.PRNGKey(1))
+    assert model.supports_chunked_prefill()
+    s, c, p = 32, 4, 7
+    prompt = jnp.asarray(RNG.integers(0, 64, size=(1, p)), jnp.int32)
+    full_logits, _ = jax.jit(model.prefill)(params, {"tokens": prompt})
+    caches = model.init_cache(2, s)
+    padded = np.zeros(((p + c - 1) // c) * c, np.int32)
+    padded[:p] = np.asarray(prompt[0])
+    step = jax.jit(model.prefill_chunk_step)
+    for ci in range(len(padded) // c):
+        lg, caches = step(params, caches, jnp.asarray(
+            padded[None, ci * c:(ci + 1) * c]), jnp.int32(1),
+            jnp.int32(ci * c))
+    last = (p - 1) - (len(padded) - c)
+    assert float(jnp.max(jnp.abs(lg[last] - full_logits[0]))) < 1e-4
+
+
+def test_chunked_prefill_rejected_for_ssm_hybrid():
+    model = _tiny_model("zamba2-2.7b", vocab_size=64)
+    assert not model.supports_chunked_prefill()
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("internlm2-1.8b", dict(num_layers=2, vocab_size=64)),
+    ("zamba2-2.7b", dict(vocab_size=64)),
+])
+def test_continuous_engine_matches_wave_outputs(arch, extra):
+    """Greedy outputs are admission-order invariant: per-slot continuous
+    batching (chunked prefill or token feed) reproduces the wave engine."""
+    model = _tiny_model(arch, **extra)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    outs = {}
+    for mode in ("wave", "continuous"):
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32, mode=mode)
+        for i in range(5):
+            eng.submit(Request(i, rng.integers(0, 64, size=int(
+                rng.integers(1, 6))).astype(np.int32), max_new_tokens=4))
+        rng = np.random.default_rng(3)  # same trace for both modes
+        done = eng.run()
+        assert len(done) == 5
+        outs[mode] = {r.req_id: r.output for r in done}
+    assert outs["wave"] == outs["continuous"]
+
+
+def test_continuous_engine_admits_into_freed_slot_without_wave_barrier():
+    """A short request finishing must not wait for the long one: with 2
+    slots and 3 requests, the third starts while the long request is still
+    decoding (ticks to finish < wave engine's)."""
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+
+    def load(eng):
+        eng.submit(Request(0, np.array([1], np.int32), max_new_tokens=20))
+        eng.submit(Request(1, np.array([2], np.int32), max_new_tokens=2))
+        eng.submit(Request(2, np.array([3], np.int32), max_new_tokens=2))
+
+    ticks = {}
+    for mode in ("continuous", "wave"):
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32, mode=mode)
+        load(eng)
+        n = 0
+        while eng.queue or any(r is not None for r in eng.active):
+            eng.step()
+            n += 1
+        ticks[mode] = n
+    assert ticks["continuous"] < ticks["wave"], ticks
+
+
+def test_max_new_tokens_one_completes_at_prefill():
+    """Chunked prefill emits the first token; a 1-token request completes
+    without a decode tick, the slot admits the next request, and step()
+    counts the prefill-emitted tokens."""
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=1, max_len=32)
+    assert eng.chunked
+    for i in range(3):
+        eng.submit(Request(i, np.array([i + 1], np.int32), max_new_tokens=1))
+    emitted = 0
+    while eng.queue or any(r is not None for r in eng.active):
+        emitted += eng.step()
+    done, eng._finished = eng._finished, []
+    assert len(done) == 3
+    assert all(len(r.output) == 1 for r in done)
+    assert emitted == sum(len(r.output) for r in done)
+
+
+def test_submit_rejects_bad_prompt_lengths():
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(0, np.zeros(0, np.int32)))
+    with pytest.raises(ValueError):
+        eng.submit(Request(1, np.zeros(16, np.int32)))
+    eng.submit(Request(2, np.zeros(15, np.int32), max_new_tokens=1))
+    assert len(eng.run()) == 1

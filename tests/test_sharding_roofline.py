@@ -6,7 +6,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, AxisType
+from repro.compat import AxisType, abstract_mesh
 
 from repro.configs import get_config, list_archs
 from repro.launch.roofline import analyze_hlo, roofline
@@ -15,7 +15,7 @@ from repro.sharding import opt_state_shardings, param_shardings
 
 
 def _mesh(shape, axes):
-    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return abstract_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 @pytest.mark.parametrize("arch", list_archs())
@@ -67,11 +67,14 @@ def test_big_params_get_meaningfully_sharded():
 _PROBE = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import AxisType, make_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
 
     L, M, K, N = 7, 64, 32, 16
 

@@ -118,3 +118,19 @@ def test_elastic_restart_on_smaller_cluster():
     j = r["jobs"]["e"]
     assert j.steps_done == 300 and j.restarts == 1
     assert "pod0/host000" not in j.assignment
+
+
+def test_util_trace_one_sample_per_event_and_monotone():
+    """Regression: run() records exactly one utilization sample per
+    processed event (the handlers used to also record, duplicating samples
+    and skewing the time-weighted average), and the trace is time-ordered."""
+    sim = Simulator(SMALL)
+    for j in _jobs(4):
+        sim.submit_at(0.0, j)
+    sim.straggle_at(5.0, "pod0/host000", 2.0)
+    sim.fail_host_at(10.0, "pod0/host001")
+    sim.heal_host_at(20.0, "pod0/host001")
+    sim.run()
+    assert len(sim.util_trace) == sim.events_processed
+    times = [t for t, _ in sim.util_trace]
+    assert times == sorted(times)
