@@ -18,4 +18,11 @@ python scripts/smoke_all.py
 echo "== serve throughput (dry) =="
 python benchmarks/serve_throughput.py --dry
 
+echo "== paged serve (dry): paged+prefix-cache vs dense =="
+python benchmarks/paged_serve.py --dry
+
+echo "== paged serve smoke (launcher) =="
+python -m repro.launch.serve --arch internlm2-1.8b --smoke --requests 6 \
+    --slots 2 --max-len 64 --max-new 6 --cache paged --page-size 8
+
 echo "CI OK"

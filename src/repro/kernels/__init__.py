@@ -2,7 +2,9 @@
 # (prefill), flash-decode, and the Mamba2 SSD intra-chunk kernel.  Each has a
 # pure-jnp oracle in ref.py; kernels are validated in interpret mode on CPU.
 from .ops import (attention_ref, decode_attention, decode_attention_ref,
-                  flash_attention, ssd_chunk, ssd_chunk_ref)
+                  flash_attention, paged_decode_attention,
+                  paged_decode_attention_ref, ssd_chunk, ssd_chunk_ref)
 
-__all__ = ["flash_attention", "decode_attention", "ssd_chunk",
-           "attention_ref", "decode_attention_ref", "ssd_chunk_ref"]
+__all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
+           "ssd_chunk", "attention_ref", "decode_attention_ref",
+           "paged_decode_attention_ref", "ssd_chunk_ref"]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from . import ref
 from .decode_attention import decode_attention_splitk_tpu, decode_attention_tpu
 from .flash_attention import flash_attention_tpu
+from .paged_attention import paged_decode_attention_tpu
 from .ssd_scan import ssd_chunk_tpu
 
 
@@ -63,6 +64,27 @@ def decode_attention(q, k_cache, v_cache, pos, *, active=None, window=0,
     return out.swapaxes(1, 2)
 
 
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_idx, pos, *, active=None,
+                           window=0, interpret=None):
+    """Model layout: q (B,1,H,D); pools (P, page_size, KV, D); page_idx
+    (B, max_pages) int32 -> (B,1,H,D).
+
+    Paged mirror of ``decode_attention``: the KV stream is gathered
+    through the page table by the kernel's scalar-prefetched index_map.
+    Unmapped entries must be 0 (null page); ``pos``/``active`` follow the
+    ragged contract.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qt = q.swapaxes(1, 2)
+    kt = k_pages.swapaxes(1, 2)
+    vt = v_pages.swapaxes(1, 2)
+    out = paged_decode_attention_tpu(qt, kt, vt, page_idx, pos,
+                                     active=active, window=window,
+                                     interpret=interpret)
+    return out.swapaxes(1, 2)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ssd_chunk(x, b, c, dt, cum, *, interpret=None):
     """SSD intra-chunk compute; shapes per ssd_chunk_tpu docstring."""
@@ -73,4 +95,5 @@ def ssd_chunk(x, b, c, dt, cum, *, interpret=None):
 # jnp oracles re-exported for convenience
 attention_ref = ref.attention_ref
 decode_attention_ref = ref.decode_attention_ref
+paged_decode_attention_ref = ref.paged_decode_attention_ref
 ssd_chunk_ref = ref.ssd_chunk_ref

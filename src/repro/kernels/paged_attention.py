@@ -1,0 +1,135 @@
+"""Pallas TPU paged flash-decode: one query token vs a page-table KV pool.
+
+The dense ragged kernel (``decode_attention.py``) streams a per-slot
+``(max_len)`` KV stripe; this kernel streams only the pages a slot's page
+table maps.  K/V live in a global pool ``(P, KV, page_size, D)`` shared by
+every slot, and the indirection is resolved **before** the kernel body runs:
+``page_idx (B, max_pages)`` rides the same scalar-prefetch channel as
+``pos (B,)`` / ``active (B,)``, and the K/V BlockSpec index_maps read it —
+grid step ``(b, h, ip)`` DMAs physical page ``page_idx[b, ip]``.  The
+gather is therefore free: Mosaic issues the indirected DMA directly, no
+materialized (B, S) copy of the cache ever exists.
+
+Contract (a strict extension of the ragged dense kernel's):
+
+* ``pos (B,)`` int32 (scalar broadcasts): slot ``b`` attends key positions
+  ``kpos <= pos[b]`` (and ``pos[b] - kpos < window`` when windowed), where
+  ``kpos = ip * page_size + offset`` is the *logical* position — page
+  indirection never changes the mask math.
+* ``active (B,)`` 0/1 (default ``pos >= 0``): inactive slots and fully
+  masked pages issue no MXU work via ``pl.when`` and write zeros.
+* Unmapped page-table entries MUST be 0 (the pool's reserved null page):
+  they are still DMA'd on the prefetch stream but never computed on, so
+  their contents are don't-care.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .decode_attention import NEG_INF, _block_needed, _normalize_pos
+
+
+def _paged_decode_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, window: int,
+                         page_size: int, scale: float):
+    ib = pl.program_id(0)
+    ip = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    pos = pos_ref[ib]
+    active = act_ref[ib]
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ip * page_size  # logical position of this page's first key
+
+    @pl.when(_block_needed(pos, active, k_start, page_size, window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (page_size, D)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_size),
+                                                  1)
+        mask = kpos <= pos
+        if window:
+            mask &= pos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
+                               active=None, window=0, interpret=False):
+    """q (B, H, 1, D); pools (P, KV, page_size, D); page_idx (B, max_pages)
+    int32; pos scalar or (B,) int32.  Returns (B, H, 1, D).
+
+    ``max_pages * page_size`` is the logical max_len.  Unmapped page-table
+    entries must be 0 (the null page); ``active`` defaults to ``pos >= 0``.
+    """
+    b, h, _, d = q.shape
+    n_pool, kv, page_size, _ = k_pages.shape
+    max_pages = page_idx.shape[1]
+    assert page_idx.shape[0] == b, (page_idx.shape, b)
+    g = h // kv
+    scale = d ** -0.5
+    pos = _normalize_pos(pos, b)
+    page_idx = jnp.asarray(page_idx, jnp.int32)
+    if active is None:
+        active = (pos >= 0).astype(jnp.int32)
+    else:
+        active = jnp.broadcast_to(
+            jnp.asarray(active, jnp.int32).reshape(-1), (b,))
+
+    kernel = functools.partial(_paged_decode_kernel, window=window,
+                               page_size=page_size, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # page_idx, pos, active
+        grid=(b, h, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda b_, h_, ip, pt_, pos_, act_: (b_, h_, 0, 0)),
+            # the paged gather: DMA physical page pt_[b, ip] of the pool
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h_, ip, pt_, pos_, act_:
+                         (pt_[b_, ip], h_ // g, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h_, ip, pt_, pos_, act_:
+                         (pt_[b_, ip], h_ // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h_, ip, pt_, pos_, act_:
+                               (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(page_idx, pos, active, q, k_pages, v_pages)

@@ -56,6 +56,28 @@ def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0):
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, page_idx, pos, *,
+                               window=0):
+    """Oracle for the paged flash-decode kernel.
+
+    q (B,H,1,D); pools (P,KV,page_size,D); page_idx (B,max_pages) int32
+    (0 = null page for unmapped blocks) -> (B,H,1,D).  Gathers each slot's
+    pages into a dense (B,KV,S,D) view (S = max_pages * page_size) and
+    defers to ``decode_attention_ref`` — logical masking is untouched by
+    the physical indirection.
+    """
+    b = q.shape[0]
+    _, kv, page_size, d = k_pages.shape
+    max_pages = page_idx.shape[1]
+    idx = jnp.asarray(page_idx, jnp.int32)
+    # (B, max_pages, KV, page_size, D) -> (B, KV, S, D)
+    k = jnp.take(k_pages, idx, axis=0).transpose(0, 2, 1, 3, 4).reshape(
+        b, kv, max_pages * page_size, d)
+    v = jnp.take(v_pages, idx, axis=0).transpose(0, 2, 1, 3, 4).reshape(
+        b, kv, max_pages * page_size, d)
+    return decode_attention_ref(q, k, v, pos, window=window)
+
+
 def ssd_chunk_ref(x, b, c, dt, cum):
     """Oracle for ssd_chunk_tpu (same shapes/contract)."""
     bb, nc, nh, q, hp = x.shape

@@ -6,6 +6,11 @@ decode engine over a synthetic request stream.
 
 ``--mode continuous`` (default) uses per-slot admission with chunked
 prefill; ``--mode wave`` runs the legacy lockstep baseline.
+
+``--cache paged`` swaps the dense per-slot KV stripes for the paged pool
+(``--page-size``, ``--num-pages``, ``--page-policy pack|spread``,
+``--no-prefix-cache``); admission then reserves only the pages a request
+can touch and queues with backpressure when the pool is exhausted.
 """
 from __future__ import annotations
 
@@ -32,6 +37,13 @@ def main():
     ap.add_argument("--mode", choices=("continuous", "wave"),
                     default="continuous")
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--cache", choices=("dense", "paged"), default="dense")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size (default: dense-equivalent capacity)")
+    ap.add_argument("--page-policy", choices=("pack", "spread"),
+                    default="pack")
+    ap.add_argument("--no-prefix-cache", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -39,7 +51,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, batch_slots=args.slots,
                          max_len=args.max_len, mode=args.mode,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk, cache=args.cache,
+                         page_size=args.page_size, num_pages=args.num_pages,
+                         page_policy=args.page_policy,
+                         prefix_cache=not args.no_prefix_cache)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(1, 6))
@@ -50,8 +65,11 @@ def main():
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.output) for r in done)
-    print(f"arch={args.arch} mode={args.mode} served {len(done)} requests, "
-          f"{toks} tokens in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+    print(f"arch={args.arch} mode={args.mode} cache={args.cache} served "
+          f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s)")
+    if args.cache == "paged":
+        print(f"kv stats: {engine.kv_stats()}")
 
 
 if __name__ == "__main__":

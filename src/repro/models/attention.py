@@ -176,6 +176,85 @@ def decode_attention_xla(q, k_cache, v_cache, pos, *, window=0):
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def paged_decode_attention_xla(q, k_pages, v_pages, page_idx, pos, *,
+                               window=0):
+    """Paged one-token decode, XLA reference path.
+
+    q (B,1,H,D); pools (P, page_size, KV, D); page_idx (B, max_pages)
+    int32 (0 = null page for unmapped blocks).  Gathers each slot's pages
+    into a dense (B, S, KV, D) view and defers to
+    ``decode_attention_xla`` — the Pallas kernel resolves the same
+    indirection inside its scalar-prefetched index_map instead of
+    materializing the gather.
+    """
+    b = q.shape[0]
+    _, page_size, kv, d = k_pages.shape
+    max_pages = page_idx.shape[1]
+    idx = jnp.asarray(page_idx, jnp.int32)
+    k = jnp.take(k_pages, idx, axis=0).reshape(b, max_pages * page_size,
+                                               kv, d)
+    v = jnp.take(v_pages, idx, axis=0).reshape(b, max_pages * page_size,
+                                               kv, d)
+    return decode_attention_xla(q, k, v, pos, window=window)
+
+
+def paged_cache_update(k_pages, v_pages, k_new, v_new, pos, page_idx,
+                       page_size):
+    """Insert (B,1,KV,D) at logical position ``pos`` through the page
+    table: slot ``b`` writes physical page ``page_idx[b, pos[b] //
+    page_size]`` at offset ``pos[b] % page_size``.
+
+    Inactive slots (pos < 0) write the null page (physical page 0, never
+    mapped), so the scatter needs no branch; its contents are don't-care.
+    """
+    b = k_new.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    idx = jnp.asarray(page_idx, jnp.int32)
+    posc = jnp.maximum(pos, 0)
+    blk = posc // page_size
+    off = posc % page_size
+    page = jnp.take_along_axis(idx, blk[:, None], axis=1)[:, 0]
+    page = jnp.where(pos >= 0, page, 0)
+    k_pages = k_pages.at[page, off].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page, off].set(v_new[:, 0].astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_prefill_chunk_update(k_pages, v_pages, k_new, v_new, slot, offset,
+                               page_idx, page_size):
+    """Write one slot's prompt chunk (1, C, KV, D), C a multiple of
+    ``page_size`` and ``offset`` page-aligned, into the C // page_size
+    physical pages its page-table row maps at block ``offset //
+    page_size``."""
+    c = k_new.shape[1]
+    assert c % page_size == 0, (c, page_size)
+    m = c // page_size
+    kv, d = k_new.shape[2], k_new.shape[3]
+    idx = jnp.asarray(page_idx, jnp.int32)
+    pages = jax.lax.dynamic_slice(idx, (slot, offset // page_size),
+                                  (1, m))[0]
+    k_pages = k_pages.at[pages].set(
+        k_new.reshape(m, page_size, kv, d).astype(k_pages.dtype))
+    v_pages = v_pages.at[pages].set(
+        v_new.reshape(m, page_size, kv, d).astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def gather_slot_pages(k_pages, v_pages, page_idx, slot):
+    """Dense (1, S, KV, D) view of one slot's mapped prefix (chunked
+    prefill reads through this; unmapped blocks gather the null page and
+    are causally masked)."""
+    _, page_size, kv, d = k_pages.shape
+    max_pages = page_idx.shape[1]
+    idx = jnp.asarray(page_idx, jnp.int32)
+    row = jax.lax.dynamic_slice(idx, (slot, 0), (1, max_pages))[0]
+    k = jnp.take(k_pages, row, axis=0).reshape(1, max_pages * page_size,
+                                               kv, d)
+    v = jnp.take(v_pages, row, axis=0).reshape(1, max_pages * page_size,
+                                               kv, d)
+    return k, v
+
+
 def cache_update(k_cache, v_cache, k_new, v_new, pos):
     """Insert (B,1,KV,D) at position ``pos`` of (B,S,KV,D) caches.
 

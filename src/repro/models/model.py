@@ -13,8 +13,9 @@ import jax.numpy as jnp
 
 from .layers import chunked_ce_loss, embed, embedding_init, rmsnorm, rmsnorm_init, unembed
 from .transformer import (apply_blocks, apply_blocks_decode,
-                          apply_blocks_prefill_chunk, init_blocks, init_cache,
-                          supports_chunked_prefill)
+                          apply_blocks_prefill_chunk, copy_cache_pages,
+                          init_blocks, init_cache, init_cache_paged,
+                          supports_chunked_prefill, supports_paged_cache)
 
 MOE_LB_COEF = 0.01
 MOE_Z_COEF = 1e-3
@@ -36,7 +37,10 @@ class RuntimeKnobs:
     remat: bool = True
     use_pallas: bool = False  # Pallas kernels (TPU); XLA path otherwise
     causal_skip: bool = False  # unrolled causal block-skip attention (H2)
-    decode_splits: int = 1  # >1: split-K two-phase flash-decode (long ctx)
+    # 0 = auto (the serving engine picks per step from (max(pos), batch) via
+    # runtime.steps.pick_decode_splits); >= 1 is a static override.  Both 0
+    # and 1 lower to the single-pass kernel outside the engine.
+    decode_splits: int = 0
     shard_fn: Callable = _identity_shard  # sharding-constraint hook
 
     def with_(self, **kw) -> "RuntimeKnobs":
@@ -145,9 +149,47 @@ class LM:
     def supports_chunked_prefill(self) -> bool:
         return supports_chunked_prefill(self.cfg)
 
+    # -------------------------------------------------------- paged cache
+    def supports_paged_cache(self) -> bool:
+        return supports_paged_cache(self.cfg)
+
+    def decode_step_paged(self, params, caches, tokens, pos, page_idx, *,
+                          page_size: int):
+        """Paged ``decode_step``: caches are global page pools and slot
+        ``b``'s KV prefix lives in pages ``page_idx[b]`` (0 = null page).
+        ``page_size`` is static per engine."""
+        x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
+        x, new_caches = apply_blocks_decode(params["blocks"], x, caches, pos,
+                                            cfg=self.cfg, knobs=self.knobs,
+                                            paged=(page_idx, page_size))
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)[:, 0, :]
+        return logits.astype(jnp.float32), new_caches
+
+    def prefill_chunk_step_paged(self, params, caches, tokens, slot, offset,
+                                 page_idx, *, page_size: int):
+        """Paged ``prefill_chunk_step``: the chunk (C a multiple of
+        ``page_size``, ``offset`` page-aligned) writes the physical pages
+        the slot's page-table row maps."""
+        x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
+        x, new_caches = apply_blocks_prefill_chunk(
+            params["blocks"], x, caches, slot, offset, cfg=self.cfg,
+            knobs=self.knobs, paged=(page_idx, page_size))
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)[0]
+        return logits.astype(jnp.float32), new_caches
+
+    def copy_cache_pages(self, caches, src, dst):
+        """Device half of CoW: duplicate physical page src -> dst in every
+        layer pool."""
+        return copy_cache_pages(caches, src, dst)
+
     # -------------------------------------------------------------- cache
     def init_cache(self, batch: int, max_len: int):
         return init_cache(self.cfg, self.knobs, batch, max_len)
+
+    def init_cache_paged(self, num_pages: int, page_size: int):
+        return init_cache_paged(self.cfg, self.knobs, num_pages, page_size)
 
     def cache_specs(self, batch: int, max_len: int):
         return jax.eval_shape(lambda: self.init_cache(batch, max_len))

@@ -184,22 +184,37 @@ def _ffn_out(p, h2, ffn, *, cfg, shard_fn):
 
 
 def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
-                             shard_fn):
+                             shard_fn, paged=None):
+    """``paged = (page_idx, page_size)`` switches the cache from a dense
+    per-slot stripe to a shared page pool addressed through the slot's
+    page-table row; attention masking is identical either way."""
     b = x.shape[0]
     h = rmsnorm(p["ln1"], x)
     pos = jnp.asarray(pos, jnp.int32)  # scalar (lockstep) or (B,) (ragged)
     positions = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim
                                  else pos, (b, 1))
     q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
-    kc, vc = attn.cache_update(cache["k"], cache["v"], k_new, v_new, pos)
-    if knobs.use_pallas:
-        from repro.kernels import decode_attention as _pallas_decode
+    if paged is not None:
+        page_idx, page_size = paged
+        kc, vc = attn.paged_cache_update(cache["k"], cache["v"], k_new,
+                                         v_new, pos, page_idx, page_size)
+        if knobs.use_pallas:
+            from repro.kernels import paged_decode_attention as _pallas_paged
 
-        blk = min(512, kc.shape[1])
-        ctx = _pallas_decode(q, kc, vc, pos, window=window, block_k=blk,
-                             num_splits=knobs.decode_splits)
+            ctx = _pallas_paged(q, kc, vc, page_idx, pos, window=window)
+        else:
+            ctx = attn.paged_decode_attention_xla(q, kc, vc, page_idx, pos,
+                                                  window=window)
     else:
-        ctx = attn.decode_attention_xla(q, kc, vc, pos, window=window)
+        kc, vc = attn.cache_update(cache["k"], cache["v"], k_new, v_new, pos)
+        if knobs.use_pallas:
+            from repro.kernels import decode_attention as _pallas_decode
+
+            blk = min(512, kc.shape[1])
+            ctx = _pallas_decode(q, kc, vc, pos, window=window, block_k=blk,
+                                 num_splits=knobs.decode_splits)
+        else:
+            ctx = attn.decode_attention_xla(q, kc, vc, pos, window=window)
     x = x + attn.attn_output(p["attn"], ctx)
     h2 = rmsnorm(p["ln2"], x)
     return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), \
@@ -207,23 +222,34 @@ def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
 
 
 def _apply_attn_block_prefill_chunk(p, x, cache, slot, offset, *, cfg, window,
-                                    knobs, ffn, shard_fn):
+                                    knobs, ffn, shard_fn, paged=None):
     """One slot's prompt chunk: x (1,C,dm) at absolute positions
     offset..offset+C-1.  Writes the chunk's K/V into cache[slot] in place,
     then runs blocked flash attention of the chunk against the slot's full
-    prefix (stale cache beyond offset+C is causally masked)."""
+    prefix (stale cache beyond offset+C is causally masked).
+
+    ``paged = (page_idx, page_size)``: the chunk (C a page multiple,
+    offset page-aligned) lands in the physical pages the slot's table
+    maps, and the prefix is read back through the same indirection."""
     c = x.shape[1]
     h = rmsnorm(p["ln1"], x)
     positions = offset + jnp.arange(c)[None, :]
     q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
-    kc = jax.lax.dynamic_update_slice(cache["k"],
-                                      k_new.astype(cache["k"].dtype),
-                                      (slot, offset, 0, 0))
-    vc = jax.lax.dynamic_update_slice(cache["v"],
-                                      v_new.astype(cache["v"].dtype),
-                                      (slot, offset, 0, 0))
-    k_slot = jax.lax.dynamic_slice_in_dim(kc, slot, 1, axis=0)
-    v_slot = jax.lax.dynamic_slice_in_dim(vc, slot, 1, axis=0)
+    if paged is not None:
+        page_idx, page_size = paged
+        kc, vc = attn.paged_prefill_chunk_update(
+            cache["k"], cache["v"], k_new, v_new, slot, offset, page_idx,
+            page_size)
+        k_slot, v_slot = attn.gather_slot_pages(kc, vc, page_idx, slot)
+    else:
+        kc = jax.lax.dynamic_update_slice(cache["k"],
+                                          k_new.astype(cache["k"].dtype),
+                                          (slot, offset, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"],
+                                          v_new.astype(cache["v"].dtype),
+                                          (slot, offset, 0, 0))
+        k_slot = jax.lax.dynamic_slice_in_dim(kc, slot, 1, axis=0)
+        v_slot = jax.lax.dynamic_slice_in_dim(vc, slot, 1, axis=0)
     ctx = attn.flash_attention_xla(q, k_slot, v_slot, causal=True,
                                    window=window,
                                    q_chunk=min(knobs.q_chunk, c),
@@ -366,23 +392,27 @@ def _walk_plan_cached(blocks, x, caches, *, cfg, inner_fn, outer_fn):
     return x, new_caches
 
 
-def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs):
+def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs, paged=None):
     plan = build_plan(cfg)
     ffn = _ffn_kind(cfg)
     shard_fn = knobs.shard_fn
+    if paged is not None and plan.inner_kind != "attn":
+        raise NotImplementedError(
+            f"paged KV cache unsupported for family={cfg.family!r}")
 
     def inner_fn(p, xx, cache, window):
         if plan.inner_kind == "attn":
             return _apply_attn_block_decode(p, xx, cache, pos, cfg=cfg,
                                             window=window, knobs=knobs,
-                                            ffn=ffn, shard_fn=shard_fn)
+                                            ffn=ffn, shard_fn=shard_fn,
+                                            paged=paged)
         return _apply_ssm_block_decode(p, xx, cache, cfg=cfg,
                                        shard_fn=shard_fn)
 
     def outer_fn(p, xx, cache, window, offn):
         return _apply_attn_block_decode(p, xx, cache, pos, cfg=cfg,
                                         window=window, knobs=knobs, ffn=offn,
-                                        shard_fn=shard_fn)
+                                        shard_fn=shard_fn, paged=paged)
 
     return _walk_plan_cached(blocks, x, caches, cfg=cfg, inner_fn=inner_fn,
                              outer_fn=outer_fn)
@@ -396,8 +426,14 @@ def supports_chunked_prefill(cfg) -> bool:
     return build_plan(cfg).inner_kind == "attn"
 
 
+def supports_paged_cache(cfg) -> bool:
+    """Paged KV needs every cached layer to BE a KV cache; SSM/hybrid
+    recurrent state is per-slot and position-free, so it cannot be paged."""
+    return build_plan(cfg).inner_kind == "attn"
+
+
 def apply_blocks_prefill_chunk(blocks, x, caches, slot, offset, *, cfg,
-                               knobs):
+                               knobs, paged=None):
     """Run ONE slot's prompt chunk x (1,C,dm) through all layers, writing
     each layer's K/V into ``caches`` at (slot, offset) in place.  Returns
     (hidden (1,C,dm), new caches).  Attention-only plans."""
@@ -411,12 +447,12 @@ def apply_blocks_prefill_chunk(blocks, x, caches, slot, offset, *, cfg,
     def inner_fn(p, xx, cache, window):
         return _apply_attn_block_prefill_chunk(
             p, xx, cache, slot, offset, cfg=cfg, window=window, knobs=knobs,
-            ffn=ffn, shard_fn=shard_fn)
+            ffn=ffn, shard_fn=shard_fn, paged=paged)
 
     def outer_fn(p, xx, cache, window, offn):
         return _apply_attn_block_prefill_chunk(
             p, xx, cache, slot, offset, cfg=cfg, window=window, knobs=knobs,
-            ffn=offn, shard_fn=shard_fn)
+            ffn=offn, shard_fn=shard_fn, paged=paged)
 
     return _walk_plan_cached(blocks, x, caches, cfg=cfg, inner_fn=inner_fn,
                              outer_fn=outer_fn)
@@ -454,3 +490,52 @@ def init_cache(cfg, knobs, batch: int, max_len: int):
     if plan.remainder:
         caches["rem"] = stack(plan.remainder, inner_cache)
     return caches
+
+
+def init_cache_paged(cfg, knobs, num_pages: int, page_size: int):
+    """Paged KV pools: same plan tree as ``init_cache``, but every attn
+    leaf is a global (num_pages, page_size, KV, D) pool shared by all
+    slots instead of a per-slot (batch, max_len) stripe.  One page table
+    addresses every layer — the stacked layer axes mean a (page, offset)
+    coordinate is valid in each pool."""
+    if not supports_paged_cache(cfg):
+        raise NotImplementedError(
+            f"paged KV cache unsupported for family={cfg.family!r}")
+    plan = build_plan(cfg)
+
+    def attn_cache():
+        return {
+            "k": jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                            cfg.head_dim), knobs.cache_dtype),
+            "v": jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                            cfg.head_dim), knobs.cache_dtype),
+        }
+
+    def stack(n, fn):
+        return jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (n,) + z.shape).copy() if n else z,
+            fn())
+
+    if plan.kind == "uniform":
+        return {"stack": stack(plan.n_layers, attn_cache)}
+    caches = {"groups": {
+        "inner": stack(plan.n_groups,
+                       lambda: stack(plan.inner_per_group, attn_cache)),
+        "outer": stack(plan.n_groups, attn_cache),
+    }}
+    if plan.remainder:
+        caches["rem"] = stack(plan.remainder, attn_cache)
+    return caches
+
+
+def copy_cache_pages(caches, src, dst):
+    """Copy physical page ``src`` -> ``dst`` in every layer pool (the
+    device half of copy-on-write).  The page axis of every paged leaf sits
+    at ndim-4 — (..., num_pages, page_size, KV, D) under the stacked layer
+    axes."""
+    def cp(leaf):
+        ax = leaf.ndim - 4
+        page = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=ax)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, page, dst, axis=ax)
+
+    return jax.tree.map(cp, caches)

@@ -1,0 +1,397 @@
+"""Paged KV-cache subsystem: block allocator + prefix cache (host side).
+
+The KV cache is serving's scarce resource, the way chips are the paper's:
+continuous batching (PR 1) made decode work proportional to live tokens,
+but every slot still *reserved* a dense ``(max_len)`` HBM stripe.  This
+module is the allocator that fixes the reservation side — the serving
+analogue of Scylla's policy-driven resource pool:
+
+* ``PagePool`` — a global pool of fixed-size pages (``page_size`` token
+  positions each), refcounted, with a free list kept per HBM *bank*.
+  Physical page 0 is reserved as the **null page**: free slots' page
+  tables point at it and inactive writes land there, so the device side
+  never needs a branch.
+* Allocation **policies** mirror ``core/policies.py``: ``pack``
+  (MinHostPolicy analogue — fill the fewest banks, contiguous page runs)
+  vs ``spread`` (SpreadPolicy analogue — round-robin the emptiest banks
+  so concurrent slots stream from disjoint banks).  Registered in
+  ``KV_PAGE_POLICIES`` just like ``POLICIES``.
+* ``PrefixCache`` — content-addressed full pages: chain-hash each
+  ``page_size``-token prompt chunk onto its parent hash and map it to
+  the page holding its K/V.  A later prompt sharing the prefix is
+  admitted at ``pos = matched`` with the cached pages mapped read-only
+  (refcount shared); **copy-on-write** fires when the admission must
+  write into a shared page (full-prompt hits re-run the last page to
+  recover logits).  Cache-only pages (refcount 1) are evicted LRU-first
+  under pool pressure.
+* ``KVCacheManager`` — per-slot page tables gluing the above to
+  ``ServeEngine``: admission reserves exactly the pages a request can
+  touch (``ceil((prompt + max_new) / page_size)``, not ``max_len``),
+  returns ``None`` for backpressure when the pool is exhausted, and
+  frees pages the moment a request finishes.
+
+Everything here is host-side bookkeeping (numpy + dicts); the device
+side consumes only the ``(slots, max_pages)`` int32 page-table array and
+the (src, dst) page-copy list that admission returns.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by ``PagePool.alloc`` when the free list cannot satisfy a
+    request; ``KVCacheManager`` turns this into backpressure."""
+
+
+# ---------------------------------------------------------------- policies
+class PagePolicy:
+    """Chooses which free pages an allocation takes (bank placement)."""
+
+    name = "base"
+
+    def select(self, free_by_bank: dict[int, list[int]],
+               in_use_by_bank: dict[int, int], n: int) -> list[int]:
+        raise NotImplementedError
+
+
+class PackPagePolicy(PagePolicy):
+    """Fill the fewest banks: partially-used banks first, lowest page ids
+    within a bank (contiguous runs — the MinHostPolicy analogue: keep
+    allocations dense so whole banks stay free for future jobs)."""
+
+    name = "pack"
+
+    def select(self, free_by_bank, in_use_by_bank, n):
+        order = sorted(free_by_bank,
+                       key=lambda b: (-in_use_by_bank[b], b))
+        out: list[int] = []
+        for b in order:
+            take = free_by_bank[b][:n - len(out)]
+            out.extend(take)
+            if len(out) == n:
+                break
+        return out
+
+
+class SpreadPagePolicy(PagePolicy):
+    """Round-robin the emptiest banks (the SpreadPolicy analogue): one
+    page per bank per round so concurrent slots stream KV from as many
+    banks as possible, at the cost of fragmenting bank-contiguity."""
+
+    name = "spread"
+
+    def select(self, free_by_bank, in_use_by_bank, n):
+        order = sorted(free_by_bank,
+                       key=lambda b: (in_use_by_bank[b], b))
+        out: list[int] = []
+        idx = {b: 0 for b in order}
+        while len(out) < n:
+            progressed = False
+            for b in order:
+                if len(out) < n and idx[b] < len(free_by_bank[b]):
+                    out.append(free_by_bank[b][idx[b]])
+                    idx[b] += 1
+                    progressed = True
+            if not progressed:
+                break
+        return out
+
+
+KV_PAGE_POLICIES = {
+    "pack": PackPagePolicy,
+    "spread": SpreadPagePolicy,
+}
+
+
+def get_page_policy(name: str) -> PagePolicy:
+    return KV_PAGE_POLICIES[name]()
+
+
+# -------------------------------------------------------------------- pool
+class PagePool:
+    """Refcounted fixed-size page pool with bank-aware placement.
+
+    Pages are numbered 0..num_pages-1; page 0 is the reserved null page
+    (never allocated, refcount pinned).  Banks stripe the pool into
+    ``num_banks`` contiguous regions — the model of HBM channels the
+    placement policies optimize over.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 policy: str | PagePolicy = "pack", num_banks: int = 8):
+        assert num_pages >= 2, "need at least the null page + one real page"
+        assert page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.num_banks = max(1, min(num_banks, num_pages - 1))
+        self.policy = (policy if isinstance(policy, PagePolicy)
+                       else get_page_policy(policy))
+        self._per_bank = -(-num_pages // self.num_banks)
+        self.ref = np.zeros(num_pages, np.int32)
+        self.ref[0] = 1  # null page: pinned, never on the free list
+        self._free_by_bank: dict[int, list[int]] = {
+            b: [] for b in range(self.num_banks)}
+        for p in range(1, num_pages):
+            self._free_by_bank[self.bank_of(p)].append(p)
+        self._in_use_by_bank: dict[int, int] = {
+            b: 0 for b in range(self.num_banks)}
+
+    def bank_of(self, page: int) -> int:
+        return page // self._per_bank
+
+    @property
+    def available(self) -> int:
+        return sum(len(v) for v in self._free_by_bank.values())
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - 1  # null page excluded
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - self.available
+
+    def alloc(self, n: int = 1) -> list[int]:
+        """Take ``n`` pages (refcount 1 each) per the placement policy."""
+        if n <= 0:
+            return []
+        if self.available < n:
+            raise PoolExhausted(
+                f"need {n} pages, {self.available} free of {self.capacity}")
+        pages = self.policy.select(self._free_by_bank, self._in_use_by_bank,
+                                   n)
+        assert len(pages) == n, (len(pages), n)
+        for p in pages:
+            self._free_by_bank[self.bank_of(p)].remove(p)
+            self._in_use_by_bank[self.bank_of(p)] += 1
+            assert self.ref[p] == 0, f"page {p} on free list with refs"
+            self.ref[p] = 1
+        return pages
+
+    def incref(self, page: int):
+        assert 0 < page < self.num_pages, page
+        assert self.ref[page] > 0, f"incref of free page {page}"
+        self.ref[page] += 1
+
+    def decref(self, page: int):
+        assert 0 < page < self.num_pages, page
+        assert self.ref[page] > 0, f"double free of page {page}"
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            b = self.bank_of(page)
+            self._free_by_bank[b].append(page)
+            self._free_by_bank[b].sort()
+            self._in_use_by_bank[b] -= 1
+
+    def banks_touched(self, pages) -> int:
+        return len({self.bank_of(p) for p in pages})
+
+
+# ------------------------------------------------------------ prefix cache
+def _chunk_key(parent: str, chunk: np.ndarray) -> str:
+    h = hashlib.sha1()
+    h.update(parent.encode())
+    h.update(np.ascontiguousarray(chunk, np.int32).tobytes())
+    return h.hexdigest()
+
+
+class PrefixCache:
+    """Content-addressed map of full prompt pages -> physical pages.
+
+    Keys chain-hash each ``page_size``-token chunk with its parent's key,
+    so a hit on chunk *i* implies chunks 0..i-1 all matched.  The cache
+    holds one refcount per entry; entries whose page refcount has dropped
+    to 1 (cache-only) are evictable, LRU order.
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._map: OrderedDict[str, int] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self):
+        return len(self._map)
+
+    def lookup(self, prompt: np.ndarray) -> tuple[list[int], int]:
+        """Longest cached prefix of ``prompt`` in whole pages.
+
+        Returns (pages, matched_tokens); each returned page has been
+        incref'd on the caller's behalf (the caller decrefs on finish).
+        """
+        ps = self.pool.page_size
+        pages: list[int] = []
+        parent = ""
+        for i in range(len(prompt) // ps):
+            key = _chunk_key(parent, prompt[i * ps:(i + 1) * ps])
+            page = self._map.get(key)
+            if page is None:
+                self.misses += 1
+                break
+            self._map.move_to_end(key)
+            self.pool.incref(page)
+            pages.append(page)
+            parent = key
+            self.hits += 1
+        return pages, len(pages) * ps
+
+    def insert(self, prompt: np.ndarray, blocks: list[int]):
+        """Register ``prompt``'s full pages (blocks[i] holds tokens
+        ``[i*ps, (i+1)*ps)``).  Existing entries are kept (first writer
+        wins); new entries take one cache refcount."""
+        ps = self.pool.page_size
+        parent = ""
+        for i in range(len(prompt) // ps):
+            key = _chunk_key(parent, prompt[i * ps:(i + 1) * ps])
+            if key not in self._map:
+                self._map[key] = blocks[i]
+                self.pool.incref(blocks[i])
+            parent = key
+
+    def evict(self, n_pages: int) -> int:
+        """Drop up to ``n_pages`` cache-only entries (page refcount 1),
+        oldest first.  Returns the number of pages actually freed."""
+        freed = 0
+        for key in list(self._map):
+            if freed >= n_pages:
+                break
+            page = self._map[key]
+            if self.pool.ref[page] == 1:  # only the cache holds it
+                del self._map[key]
+                self.pool.decref(page)
+                freed += 1
+        return freed
+
+
+# ---------------------------------------------------------------- manager
+@dataclass
+class AdmitResult:
+    """What the engine needs to act on an admission."""
+
+    start: int  # prefill resumes here (tokens [start, len(prompt)) run)
+    matched: int  # tokens satisfied by the prefix cache
+    cow: list = field(default_factory=list)  # [(src_page, dst_page)] copies
+    blocks: list = field(default_factory=list)
+
+
+class KVCacheManager:
+    """Per-slot page tables over a shared ``PagePool`` (+ prefix cache).
+
+    The device contract is the ``page_table`` int32 array
+    ``(slots, max_pages)``: logical block *i* of slot *s* lives in
+    physical page ``page_table[s, i]`` (0 = null page for unmapped
+    blocks).  One table serves every layer — layer pools are stacked, so
+    a (page, offset) write lands at the same coordinates in each.
+    """
+
+    def __init__(self, *, slots: int, max_len: int, page_size: int,
+                 num_pages: int, policy: str | PagePolicy = "pack",
+                 prefix_cache: bool = True, num_banks: int = 8,
+                 chunk: int = 0):
+        assert max_len % page_size == 0, (max_len, page_size)
+        self.page_size = page_size
+        self.max_pages = max_len // page_size
+        self.max_len = max_len
+        self.chunk = chunk or page_size  # engine's prefill-chunk grid
+        assert self.chunk % page_size == 0, (self.chunk, page_size)
+        self.pool = PagePool(num_pages, page_size, policy=policy,
+                             num_banks=num_banks)
+        self.prefix = PrefixCache(self.pool) if prefix_cache else None
+        self.page_table = np.zeros((slots, self.max_pages), np.int32)
+        self._held: list[list[int]] = [[] for _ in range(slots)]
+
+    # ------------------------------------------------------------- sizing
+    def blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        need = min(prompt_len + max_new, self.max_len)
+        return -(-need // self.page_size)
+
+    def fits_ever(self, prompt_len: int, max_new: int) -> bool:
+        """Could this request EVER be admitted (empty pool)?"""
+        n = self.blocks_needed(prompt_len, max_new)
+        # headroom: a prefix hit that re-runs the last chunk CoWs at most
+        # chunk // page_size shared pages
+        return (n <= self.max_pages
+                and n + self.chunk // self.page_size <= self.pool.capacity)
+
+    # ---------------------------------------------------------- admission
+    def admit(self, slot: int, prompt: np.ndarray,
+              max_new: int) -> Optional[AdmitResult]:
+        """Reserve pages for a request; None = backpressure (try later).
+
+        On success the slot's page-table row maps every block the request
+        can touch; cached prefix pages are shared (read-only) and the
+        result carries the (src, dst) device copies CoW demands.
+
+        The prefill start is the largest multiple of ``self.chunk`` (the
+        engine's prefill-chunk grid) not past the matched prefix; a
+        full-prompt hit re-runs the last chunk to recover the logits that
+        seed decode.  Every shared page the rewrite touches is CoW'd —
+        the rewrite produces the same K/V, but the shared page must not
+        see even an identical write while other slots read it.
+        """
+        assert not self._held[slot], f"slot {slot} already holds pages"
+        prompt = np.asarray(prompt, np.int32)
+        p = len(prompt)
+        ps = self.page_size
+        chunk = self.chunk
+        n_blocks = self.blocks_needed(p, max_new)
+
+        cached: list[int] = []
+        matched = 0
+        if self.prefix is not None:
+            cached, matched = self.prefix.lookup(prompt)
+        start = (min(matched, p - 1) // chunk) * chunk
+        first_write_block = start // ps
+        cow_blocks = list(range(first_write_block, len(cached)))
+        need_new = n_blocks - len(cached) + len(cow_blocks)
+        if self.pool.available < need_new and self.prefix is not None:
+            self.prefix.evict(need_new - self.pool.available)
+        if self.pool.available < need_new:
+            for pg in cached:  # roll back lookup refs; stay queued
+                self.pool.decref(pg)
+            return None
+        fresh = self.pool.alloc(need_new)
+        blocks = list(cached)
+        cow = []
+        for blk in cow_blocks:
+            dst = fresh.pop()
+            cow.append((blocks[blk], dst))
+            self.pool.decref(blocks[blk])
+            blocks[blk] = dst
+        blocks.extend(fresh)
+        assert len(blocks) == n_blocks, (len(blocks), n_blocks)
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :n_blocks] = blocks
+        self._held[slot] = blocks
+        return AdmitResult(start=start, matched=matched, cow=cow,
+                           blocks=blocks)
+
+    def register_prefix(self, slot: int, prompt: np.ndarray):
+        """After prefill: publish the slot's full prompt pages for reuse."""
+        if self.prefix is not None:
+            self.prefix.insert(np.asarray(prompt, np.int32),
+                               self._held[slot])
+
+    def free_slot(self, slot: int):
+        for pg in self._held[slot]:
+            self.pool.decref(pg)
+        self._held[slot] = []
+        self.page_table[slot, :] = 0
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "page_size": self.page_size,
+            "capacity_pages": self.pool.capacity,
+            "in_use_pages": self.pool.in_use,
+            "prefix_entries": 0 if self.prefix is None else len(self.prefix),
+            "prefix_hits": 0 if self.prefix is None else self.prefix.hits,
+            "prefix_misses": (0 if self.prefix is None
+                              else self.prefix.misses),
+        }

@@ -25,8 +25,27 @@ fed token-by-token — as the baseline ``benchmarks/serve_throughput.py``
 measures continuous batching against (the serving analogue of the paper's
 exclusive, non-co-scheduled mode).
 
+Paged KV cache (``cache="paged"``, continuous mode only)
+--------------------------------------------------------
+The dense layout reserves a ``(max_len)`` HBM stripe per slot no matter
+how short the request.  ``cache="paged"`` swaps it for a global page pool
+(``runtime/kv_pool.py``): admission reserves exactly
+``ceil((prompt + max_new) / page_size)`` pages under a pluggable
+placement policy, ``submit`` queues with **backpressure** when the pool
+is exhausted (``step`` never raises), and pages return to the pool the
+moment a request finishes.  A prefix cache hashes full prompt pages so a
+request sharing a cached prefix is admitted at ``pos = matched`` with the
+shared pages mapped read-only — copy-on-write duplicates a shared page
+only when the admission must write into it.  The decode step consumes
+the ``(slots, max_pages)`` page-table array through the paged Pallas
+kernel's scalar-prefetch contract (``kernels/paged_attention.py``).
+
 All step functions keep static shapes and donate the caches, so each mode
-compiles exactly once per (slots, max_len) and decodes in place.
+compiles exactly once per (slots, max_len) and decodes in place.  Dense
+continuous decode additionally picks its split-K fan-out per tick from
+``(max(pos), live slots)`` (``steps.pick_decode_splits``) when
+``RuntimeKnobs.decode_splits`` is 0 (auto); each chosen fan-out compiles
+once and is cached.
 """
 from __future__ import annotations
 
@@ -38,7 +57,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.steps import make_prefill_chunk_step, make_serve_step
+from repro.runtime.kv_pool import KVCacheManager
+from repro.runtime.steps import (make_paged_prefill_chunk_step,
+                                 make_paged_serve_step,
+                                 make_prefill_chunk_step, make_serve_step,
+                                 pick_decode_splits)
 
 
 @dataclass
@@ -54,37 +77,81 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int, max_len: int,
                  mode: str = "continuous", prefill_chunk: int = 32,
-                 mesh=None, cache_shardings=None):
+                 mesh=None, cache_shardings=None, cache: str = "dense",
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 page_policy: str = "pack", prefix_cache: bool = True):
         assert mode in ("continuous", "wave"), mode
+        assert cache in ("dense", "paged"), cache
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.mode = mode
         self.mesh = mesh
+        self.cache = cache
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * batch_slots
         self.pos = np.full(batch_slots, -1, dtype=np.int32)
-        self.caches = model.init_cache(batch_slots, max_len)
-        if cache_shardings is not None:
-            self.caches = jax.device_put(self.caches, cache_shardings)
         self.tokens = np.zeros((batch_slots, 1), dtype=np.int32)
         self._finished: list[Request] = []
         self._admit_emitted = 0  # tokens emitted by chunked prefill
-        self._step = jax.jit(make_serve_step(model), donate_argnums=(1,))
         self._decode_one = jax.jit(model.decode_step, donate_argnums=(1,))
-        # chunked prefill: one compiled (1, C) step reused for every slot
-        # and offset; C rounded down to a divisor of max_len so padded
-        # chunk writes never clamp out of bounds.
-        self.chunked = (mode == "continuous" and prefill_chunk > 1
-                        and model.supports_chunked_prefill())
-        c = max(1, min(prefill_chunk, max_len))
-        while max_len % c:
-            c -= 1
-        self.prefill_chunk = c
-        if self.chunked:
-            self._prefill = jax.jit(make_prefill_chunk_step(model),
-                                    donate_argnums=(1,))
+        self.kv: Optional[KVCacheManager] = None
+        if cache == "paged":
+            if mode != "continuous":
+                raise ValueError("cache='paged' requires mode='continuous'")
+            if not model.supports_paged_cache():
+                raise ValueError(
+                    f"paged KV cache unsupported for "
+                    f"family={model.cfg.family!r}")
+            if max_len % page_size:
+                raise ValueError(f"max_len {max_len} not a multiple of "
+                                 f"page_size {page_size}")
+            # prefill chunks must cover whole pages at page-aligned
+            # offsets; C also divides max_len so chunk writes never clamp
+            c = max(page_size, (min(prefill_chunk, max_len) // page_size)
+                    * page_size)
+            while max_len % c:
+                c -= page_size
+            self.prefill_chunk = c
+            self.chunked = True
+            # dense-equivalent capacity by default (+ the null page);
+            # benchmarks pass a smaller pool to realize the HBM saving
+            if num_pages is None:
+                num_pages = batch_slots * (max_len // page_size) + 1
+            self.kv = KVCacheManager(
+                slots=batch_slots, max_len=max_len, page_size=page_size,
+                num_pages=num_pages, policy=page_policy,
+                prefix_cache=prefix_cache, chunk=c)
+            self.caches = model.init_cache_paged(num_pages, page_size)
+            self._step = jax.jit(make_paged_serve_step(model, page_size),
+                                 donate_argnums=(1,))
+            self._prefill = jax.jit(
+                make_paged_prefill_chunk_step(model, page_size),
+                donate_argnums=(1,))
+        else:
+            self.caches = model.init_cache(batch_slots, max_len)
+            self._step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+            # chunked prefill: one compiled (1, C) step reused for every
+            # slot and offset; C rounded down to a divisor of max_len so
+            # padded chunk writes never clamp out of bounds.
+            self.chunked = (mode == "continuous" and prefill_chunk > 1
+                            and model.supports_chunked_prefill())
+            c = max(1, min(prefill_chunk, max_len))
+            while max_len % c:
+                c -= 1
+            self.prefill_chunk = c
+            if self.chunked:
+                self._prefill = jax.jit(make_prefill_chunk_step(model),
+                                        donate_argnums=(1,))
+        if cache_shardings is not None:
+            self.caches = jax.device_put(self.caches, cache_shardings)
+        # split-K autotune (dense Pallas decode only): pick the fan-out
+        # per tick from (max(pos), live slots); each compiles once.
+        self._autotune = (cache == "dense" and mode == "continuous"
+                          and model.knobs.use_pallas
+                          and model.knobs.decode_splits == 0)
+        self._step_by_splits = {1: self._step}
         # SSM/hybrid state is not position-masked: zero a slot on admission
         self._needs_reset = model.cfg.family in ("ssm", "hybrid")
         if self._needs_reset:
@@ -118,6 +185,13 @@ class ServeEngine:
             raise ValueError(
                 f"prompt length {len(req.prompt)} outside [1, "
                 f"{self.max_len - 1}] for max_len={self.max_len}")
+        if self.kv is not None and not self.kv.fits_ever(
+                len(req.prompt), req.max_new_tokens):
+            raise ValueError(
+                f"request needs more pages than the pool can ever supply "
+                f"(prompt {len(req.prompt)} + max_new {req.max_new_tokens} "
+                f"vs {self.kv.pool.capacity} pages of "
+                f"{self.kv.page_size})")
         self.queue.append(req)
 
     # ------------------------------------------------------------ admission
@@ -127,12 +201,34 @@ class ServeEngine:
         self.active[s] = None
         self.pos[s] = -1
         self.tokens[s, 0] = 0
+        if self.kv is not None:
+            self.kv.free_slot(s)  # pages return to the pool immediately
         self._finished.append(req)
 
     def _admit_continuous(self):
-        """Per-slot admission: every free slot takes the next request now."""
+        """Per-slot admission: every free slot takes the next request now.
+
+        Paged mode reserves the request's pages first; if the pool cannot
+        supply them the request stays queued (FIFO backpressure) and the
+        tick proceeds with the slots already live — ``step`` never raises
+        on exhaustion.
+        """
         for s in range(self.slots):
             while self.active[s] is None and self.queue:
+                if self.kv is not None:
+                    req = self.queue[0]
+                    res = self.kv.admit(s, req.prompt, req.max_new_tokens)
+                    if res is None:
+                        return  # backpressure: retry after slots drain
+                    self.queue.popleft()
+                    self.active[s] = req
+                    # CoW pages (res.cow) need no device copy here: they
+                    # span [start, matched), so the first re-run prefill
+                    # chunk rewrites every one of them in full (chunks
+                    # write whole pages) before anything reads them
+                    self._prefill_slot(s, req, start=res.start)
+                    self._maybe_stop(s)
+                    continue
                 req = self.queue.popleft()
                 self.active[s] = req
                 if self._needs_reset:
@@ -148,27 +244,37 @@ class ServeEngine:
                     self.tokens[s, 0] = req._feed.popleft()
                     self.pos[s] = 0
 
-    def _prefill_slot(self, s: int, req: Request):
-        """Run the slot's prompt through the stack in (1, C) chunks,
-        writing the KV cache in place; the last real token's logits seed
-        decode at pos = prompt_len."""
+    def _prefill_slot(self, s: int, req: Request, start: int = 0):
+        """Run the slot's prompt tokens [start, prompt_len) through the
+        stack in (1, C) chunks, writing the KV cache in place; the last
+        real token's logits seed decode at pos = prompt_len.
+
+        ``start`` (paged mode, a multiple of C and <= prompt_len - 1) is
+        where the prefix cache left off; the paged step additionally
+        takes the page-table array, and the full prompt pages are
+        published for future prefix hits afterwards."""
         c = self.prefill_chunk
         prompt = np.asarray(req.prompt, np.int32)
         p = len(prompt)
-        n_chunks = max(1, -(-p // c))
+        n_chunks = max(1, -(-(p - start) // c))
         padded = np.zeros(n_chunks * c, np.int32)
-        padded[:p] = prompt
+        padded[:p - start] = prompt[start:]
         req._feed = deque()  # type: ignore
+        extra = (() if self.kv is None
+                 else (jnp.asarray(self.kv.page_table),))
         nxt = None
         for ci in range(n_chunks):
             chunk = jnp.asarray(padded[None, ci * c:(ci + 1) * c])
-            nxt, self.caches = self._prefill(self.params, self.caches, chunk,
-                                             jnp.int32(s), jnp.int32(ci * c))
-        tok = int(np.asarray(nxt)[(p - 1) - (n_chunks - 1) * c])
+            nxt, self.caches = self._prefill(
+                self.params, self.caches, chunk, jnp.int32(s),
+                jnp.int32(start + ci * c), *extra)
+        tok = int(np.asarray(nxt)[(p - start - 1) - (n_chunks - 1) * c])
         self.pos[s] = p
         self.tokens[s, 0] = tok
         req.output.append(tok)
         self._admit_emitted += 1
+        if self.kv is not None:
+            self.kv.register_prefix(s, prompt)
 
     def _maybe_stop(self, s: int) -> bool:
         req = self.active[s]
@@ -204,15 +310,37 @@ class ServeEngine:
             return self._step_wave()
         return self._step_continuous()
 
+    def _step_for_splits(self, splits: int):
+        """Dense decode step with a given split-K fan-out, compiled once
+        per fan-out (the small set the heuristic emits: 1, 2, 4, 8)."""
+        fn = self._step_by_splits.get(splits)
+        if fn is None:
+            model = type(self.model)(
+                self.model.cfg,
+                self.model.knobs.with_(decode_splits=splits))
+            fn = jax.jit(make_serve_step(model), donate_argnums=(1,))
+            self._step_by_splits[splits] = fn
+        return fn
+
     def _step_continuous(self) -> int:
         self._admit_emitted = 0
         self._admit_continuous()
         emitted = self._admit_emitted  # first tokens from chunked prefill
-        if not any(r is not None for r in self.active):
+        live = sum(r is not None for r in self.active)
+        if not live:
             return emitted
         pos = jnp.asarray(self.pos)
-        nxt_dev, self.caches = self._step(self.params, self.caches,
-                                          jnp.asarray(self.tokens), pos)
+        if self.kv is not None:
+            nxt_dev, self.caches = self._step(
+                self.params, self.caches, jnp.asarray(self.tokens), pos,
+                jnp.asarray(self.kv.page_table))
+        else:
+            step = self._step
+            if self._autotune:
+                step = self._step_for_splits(pick_decode_splits(
+                    int(self.pos.max()), live, max_len=self.max_len))
+            nxt_dev, self.caches = step(self.params, self.caches,
+                                        jnp.asarray(self.tokens), pos)
         nxt = np.asarray(nxt_dev)
         for s, req in enumerate(self.active):
             if req is None:
@@ -258,6 +386,19 @@ class ServeEngine:
                 self.active[s] = None
                 self._finished.append(req)
         return emitted
+
+    # ------------------------------------------------------------- metrics
+    def kv_reserved_bytes(self) -> int:
+        """HBM bytes held by the KV cache (dense stripes or page pools)."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.caches))
+
+    def kv_stats(self) -> dict:
+        stats = {"cache": self.cache,
+                 "kv_reserved_bytes": self.kv_reserved_bytes()}
+        if self.kv is not None:
+            stats.update(self.kv.stats())
+        return stats
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0

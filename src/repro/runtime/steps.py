@@ -115,3 +115,60 @@ def make_prefill_chunk_step(model) -> Callable:
         return next_tokens, new_caches
 
     return prefill_chunk_step
+
+
+# ------------------------------------------------------------------- paged
+def make_paged_serve_step(model, page_size: int) -> Callable:
+    """Greedy decode step over a paged KV cache: identical to
+    ``make_serve_step`` plus the scalar-prefetched ``page_idx (B,
+    max_pages)`` page-table array (``page_size`` is static)."""
+    def serve_step(params, caches, tokens, pos, page_idx):
+        logits, new_caches = model.decode_step_paged(params, caches, tokens,
+                                                     pos, page_idx,
+                                                     page_size=page_size)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, new_caches
+
+    return serve_step
+
+
+def make_paged_prefill_chunk_step(model, page_size: int) -> Callable:
+    """Paged chunked prefill: the (1, C) chunk lands in the physical pages
+    the slot's page-table row maps (C a page multiple, offset aligned)."""
+    def prefill_chunk_step(params, caches, tokens, slot, offset, page_idx):
+        logits, new_caches = model.prefill_chunk_step_paged(
+            params, caches, tokens, slot, offset, page_idx,
+            page_size=page_size)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_caches
+
+    return prefill_chunk_step
+
+
+# -------------------------------------------------------- split-K autotune
+def pick_decode_splits(max_pos: int, batch: int, *, max_len: int,
+                       override: int = 0) -> int:
+    """Choose the split-K fan-out for this decode tick.
+
+    Split-K buys concurrency on the KV HBM stream: with few live slots
+    and a long prefix, one sequential stream under-subscribes the memory
+    system, so we split it.  With many live slots the batch axis already
+    provides the parallelism and extra splits only pay combine overhead.
+
+    Heuristic: double the splits while (a) each split still covers >= 2k
+    tokens of live prefix, (b) total concurrent streams (batch * splits)
+    stay <= 32, and (c) the split count divides ``max_len`` (the kernel
+    partitions the padded cache axis).  ``override >= 1`` (the
+    ``RuntimeKnobs.decode_splits`` static knob) bypasses the heuristic.
+    """
+    if override >= 1:
+        return override
+    if max_pos < 2048:
+        return 1
+    splits = 1
+    while (splits < 8
+           and max_pos // (2 * splits) >= 2048
+           and 2 * splits * max(batch, 1) <= 32
+           and max_len % (2 * splits) == 0):
+        splits *= 2
+    return splits
