@@ -16,6 +16,23 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     return dt, out
 
 
+def request_latency_stats(reqs) -> dict:
+    """p50/p99 aggregation of ``runtime.serve.request_metrics`` (TTFT and
+    TPOT) over a batch of served requests."""
+    import numpy as np
+
+    from repro.runtime.serve import request_metrics
+
+    ms = [request_metrics(r) for r in reqs]
+    out = {}
+    for key in ("ttft_s", "tpot_s"):
+        vals = [m[key] for m in ms if key in m]
+        if vals:
+            out[f"p50_{key}"] = float(np.percentile(vals, 50))
+            out[f"p99_{key}"] = float(np.percentile(vals, 99))
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 

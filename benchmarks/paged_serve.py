@@ -8,7 +8,8 @@ dense reservation (requests only ever touch ``prompt + max_new`` tokens,
 never ``max_len``) with prefix caching on, so repeated system prompts
 skip their chunked-prefill work entirely.
 
-Reported per engine: tokens/s, wall seconds, KV HBM bytes *reserved*
+Reported per engine: tokens/s, wall seconds, per-request p50/p99
+time-to-first-token and time-per-output-token, KV HBM bytes *reserved*
 (the allocation the engine holds for its whole life — the paper's pooled
 vs static-partition comparison), and for the paged engine the prefix-hit
 counters.  The gate: the paged engine must reserve measurably less KV
@@ -31,13 +32,13 @@ import jax.numpy as jnp
 import numpy as np
 
 try:  # python -m benchmarks.run / -m benchmarks.paged_serve
-    from .common import emit_json
+    from .common import emit_json, request_latency_stats
 except ImportError:  # python benchmarks/paged_serve.py
     sys.path.insert(0, os.path.dirname(__file__))
-    from common import emit_json
+    from common import emit_json, request_latency_stats
 from repro.configs import get_config
 from repro.models import LM, RuntimeKnobs
-from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.serve import Request, ServeConfig, ServeEngine
 
 
 def shared_prefix_trace(*, n_req, prefix_len, tail_max, n_long, long_prompt,
@@ -63,7 +64,7 @@ def shared_prefix_trace(*, n_req, prefix_len, tail_max, n_long, long_prompt,
 
 
 def run_engine(model, params, reqs, *, warm_prompt, reps=3, **engine_kw):
-    eng = ServeEngine(model, params, **engine_kw)
+    eng = ServeEngine(model, params, ServeConfig(**engine_kw))
     # warmup: compile every step shape this engine will hit — the repeat
     # of a page-aligned prompt drives the prefix-hit admission path
     # (full-hit CoW remap + offset prefill) on the paged engine
@@ -95,6 +96,9 @@ def run_engine(model, params, reqs, *, warm_prompt, reps=3, **engine_kw):
         "wall_s": wall,
         "tok_per_s": toks / max(wall, 1e-9),
     }
+    # per-request TTFT/TPOT percentiles from the last rep's lifecycle
+    # stamps (wall_s stays best-of-reps)
+    out.update(request_latency_stats(done))
     out.update(eng.kv_stats())
     return out, {r.req_id: r.output for r in done}
 
@@ -133,8 +137,9 @@ def run(dry: bool = True, slots: int = 4, max_len: int = 128,
             batch_slots=slots, max_len=max_len, prefill_chunk=chunk, **kw)
         results[name] = r
         print(f"{name:6s}: {r['tokens']} tok in {r['wall_s']:.2f}s -> "
-              f"{r['tok_per_s']:.1f} tok/s, KV reserved "
-              f"{r['kv_reserved_bytes'] / 1024:.0f} KiB"
+              f"{r['tok_per_s']:.1f} tok/s, ttft p50/p99 "
+              f"{r['p50_ttft_s'] * 1e3:.0f}/{r['p99_ttft_s'] * 1e3:.0f}ms, "
+              f"KV reserved {r['kv_reserved_bytes'] / 1024:.0f} KiB"
               + (f", prefix hits {r['prefix_hits']}" if name == "paged"
                  else ""))
     assert outs["dense"] == outs["paged"], \

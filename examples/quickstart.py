@@ -13,7 +13,7 @@ from repro.configs import get_config
 from repro.data import MarkovSynthetic
 from repro.models import LM, RuntimeKnobs
 from repro.optim import AdamWConfig
-from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.serve import Request, ServeConfig, ServeEngine
 from repro.runtime.train import TrainConfig, Trainer
 
 
@@ -34,8 +34,8 @@ def main():
     print(f"loss {first:.3f} -> {last:.3f} "
           f"({(1 - last / first) * 100:.0f}% down)")
 
-    engine = ServeEngine(model, trainer.state["params"], batch_slots=2,
-                         max_len=64)
+    engine = ServeEngine(model, trainer.state["params"],
+                         ServeConfig(batch_slots=2, max_len=64))
     engine.submit(Request(0, np.array([3, 5], np.int32), max_new_tokens=8))
     engine.submit(Request(1, np.array([10], np.int32), max_new_tokens=8))
     for req in engine.run():

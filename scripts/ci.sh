@@ -25,4 +25,11 @@ echo "== paged serve smoke (launcher) =="
 python -m repro.launch.serve --arch internlm2-1.8b --smoke --requests 6 \
     --slots 2 --max-len 64 --max-new 6 --cache paged --page-size 8
 
+echo "== admission policy smokes (launcher, sampled, 2 tenants) =="
+for policy in fcfs priority sjf drf-fair; do
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 6 --slots 2 --max-len 64 --max-new 6 \
+        --policy "$policy" --tenants 2 --temperature 0.7 --top-k 8
+done
+
 echo "CI OK"

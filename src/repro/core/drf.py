@@ -5,6 +5,12 @@ share*; dominant share = max over resource dimensions of
 (framework's allocation / cluster total).  The paper relies on Mesos/DRF for
 multi-framework fairness; we reproduce it so multi-tenant experiments
 (benchmarks/cosched_utilization.py) carry the same semantics.
+
+The allocator is generic over the resource vector: any type supporting
+``+``/``-``, ``nonneg()`` and ``dominant_share(total)`` works.  The
+cluster scheduler accounts in ``ResourceSpec`` (chips, HBM); the serving
+front-end reuses the same allocator with its own (slots, KV) vector
+(``runtime/scheduler.ServeResource``) for per-tenant admission fairness.
 """
 from __future__ import annotations
 
@@ -20,12 +26,13 @@ class FrameworkAccount:
 
 
 class DRFAllocator:
-    def __init__(self, total: ResourceSpec):
+    def __init__(self, total, zero=None):
         self.total = total
+        self._zero = zero if zero is not None else type(total)()
         self.accounts: dict[str, FrameworkAccount] = {}
 
     def register(self, name: str) -> None:
-        self.accounts.setdefault(name, FrameworkAccount(name))
+        self.accounts.setdefault(name, FrameworkAccount(name, self._zero))
 
     def dominant_share(self, name: str) -> float:
         return self.accounts[name].allocated.dominant_share(self.total)
@@ -46,6 +53,10 @@ class DRFAllocator:
         acct = self.accounts[name]
         acct.allocated = acct.allocated - res
         assert acct.allocated.nonneg(), f"negative allocation for {name}"
+
+    def shares(self) -> dict[str, float]:
+        """Dominant-share snapshot per framework (fairness telemetry)."""
+        return {n: self.dominant_share(n) for n in self.accounts}
 
     def set_total(self, total: ResourceSpec) -> None:
         self.total = total

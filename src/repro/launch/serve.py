@@ -7,6 +7,12 @@ decode engine over a synthetic request stream.
 ``--mode continuous`` (default) uses per-slot admission with chunked
 prefill; ``--mode wave`` runs the legacy lockstep baseline.
 
+``--policy fcfs|priority|sjf|drf-fair`` picks the admission policy;
+``--tenants N`` spreads the synthetic requests round-robin over N tenants
+(tenant-0..tenant-N-1) so ``drf-fair`` has shares to balance.
+``--temperature/--top-k/--top-p/--seed`` set the per-request sampling
+params (temperature 0 = greedy).
+
 ``--cache paged`` swaps the dense per-slot KV stripes for the paged pool
 (``--page-size``, ``--num-pages``, ``--page-policy pack|spread``,
 ``--no-prefix-cache``); admission then reserves only the pages a request
@@ -23,7 +29,9 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import LM, RuntimeKnobs
-from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.scheduler import ADMISSION_POLICIES
+from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
+                                 ServeEngine)
 
 
 def main():
@@ -37,6 +45,16 @@ def main():
     ap.add_argument("--mode", choices=("continuous", "wave"),
                     default="continuous")
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--policy", choices=sorted(ADMISSION_POLICIES),
+                    default="fcfs", help="admission policy")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="spread requests over N tenants (round-robin)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed (default: request id)")
     ap.add_argument("--cache", choices=("dense", "paged"), default="dense")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None,
@@ -49,25 +67,38 @@ def main():
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, batch_slots=args.slots,
-                         max_len=args.max_len, mode=args.mode,
-                         prefill_chunk=args.prefill_chunk, cache=args.cache,
-                         page_size=args.page_size, num_pages=args.num_pages,
-                         page_policy=args.page_policy,
-                         prefix_cache=not args.no_prefix_cache)
+    engine = ServeEngine(model, params, ServeConfig(
+        batch_slots=args.slots, max_len=args.max_len, mode=args.mode,
+        prefill_chunk=args.prefill_chunk, cache=args.cache,
+        page_size=args.page_size, num_pages=args.num_pages,
+        page_policy=args.page_policy,
+        prefix_cache=not args.no_prefix_cache, policy=args.policy))
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed)
     rng = np.random.default_rng(0)
+    handles = []
     for i in range(args.requests):
         plen = int(rng.integers(1, 6))
-        engine.submit(Request(i, rng.integers(
-            0, cfg.vocab_size, size=plen).astype(np.int32),
-            max_new_tokens=args.max_new))
+        handles.append(engine.submit(Request(
+            i, rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+            max_new_tokens=args.max_new, sampling=sampling,
+            tenant=f"tenant-{i % max(args.tenants, 1)}",
+            priority=i % 3)))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.output) for r in done)
-    print(f"arch={args.arch} mode={args.mode} cache={args.cache} served "
-          f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / max(dt, 1e-9):.1f} tok/s)")
+    ttft = [h.metrics().get("ttft_s") for h in handles]
+    ttft = [t for t in ttft if t is not None]
+    print(f"arch={args.arch} mode={args.mode} cache={args.cache} "
+          f"policy={args.policy} served {len(done)} requests, {toks} "
+          f"tokens in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+    if ttft:
+        print(f"ttft p50 {np.percentile(ttft, 50) * 1e3:.0f}ms / "
+              f"p99 {np.percentile(ttft, 99) * 1e3:.0f}ms "
+              f"(finish reasons: "
+              f"{sorted({r.finish_reason for r in done})})")
     if args.cache == "paged":
         print(f"kv stats: {engine.kv_stats()}")
 

@@ -1,5 +1,9 @@
+from .sampling import SamplingParams
+from .scheduler import (ADMISSION_POLICIES, AdmissionPolicy,
+                        get_admission_policy)
 from .steps import (init_train_state, make_prefill_step, make_serve_step,
                     make_train_step)
 
 __all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
-           "init_train_state"]
+           "init_train_state", "SamplingParams", "AdmissionPolicy",
+           "ADMISSION_POLICIES", "get_admission_policy"]

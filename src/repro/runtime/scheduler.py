@@ -1,0 +1,227 @@
+"""Admission scheduling: which queued request does a freed slot take?
+
+The serving mirror of ``core/policies.py``: admission policies are small
+host-side objects registered in ``ADMISSION_POLICIES`` and resolved by
+``get_admission_policy(name)``, exactly like placement policies.  A policy
+only ever sees host bookkeeping — the queue, per-tenant accounting, a KV
+reservation view — never device state; the engine's executor applies the
+decisions (``ServeEngine._execute_admission``) and runs the compiled steps.
+
+* ``fcfs``     — first come, first served (the PR 1/2 behavior).
+* ``priority`` — highest ``Request.priority`` first, FIFO within a level.
+* ``sjf``      — shortest job first by predicted work
+  (``prompt_len + max_new_tokens``): minimizes mean wait on mixed traces,
+  at the cost of starving long requests under sustained short load.
+* ``drf-fair`` — Dominant Resource Fairness across *tenants*, charging
+  each admission's slot and KV reservation through
+  ``core/drf.py``'s ``DRFAllocator`` — the direct serving analogue of
+  Scylla's Mesos-level DRF across frameworks: every freed slot goes to
+  the tenant with the lowest dominant share, so a flooding tenant cannot
+  starve a light one out of the pool.
+
+The DRF resource vector is ``ServeResource(slots, kv)``: ``slots`` counts
+decode slots held, ``kv`` counts the KV reservation (pages for the paged
+cache, token positions for dense).  Whichever dimension a tenant uses the
+most of *relative to the pool* is its dominant share.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.drf import DRFAllocator
+
+
+@dataclass(frozen=True)
+class ServeResource:
+    """DRF demand/allocation vector for serving: decode slots + KV."""
+
+    slots: float = 0.0
+    kv: float = 0.0
+
+    def __add__(self, o: "ServeResource") -> "ServeResource":
+        return ServeResource(self.slots + o.slots, self.kv + o.kv)
+
+    def __sub__(self, o: "ServeResource") -> "ServeResource":
+        return ServeResource(self.slots - o.slots, self.kv - o.kv)
+
+    def nonneg(self) -> bool:
+        return self.slots >= -1e-9 and self.kv >= -1e-9
+
+    def dominant_share(self, total: "ServeResource") -> float:
+        shares = []
+        if total.slots:
+            shares.append(self.slots / total.slots)
+        if total.kv:
+            shares.append(self.kv / total.kv)
+        return max(shares) if shares else 0.0
+
+
+# ---------------------------------------------------------------- policies
+class AdmissionPolicy:
+    """Chooses which queued request the next freed slot admits."""
+
+    name = "base"
+
+    def bind(self, total: ServeResource) -> None:
+        """Called once by the scheduler with the pool totals."""
+
+    def select(self, queue) -> int:
+        """Index into ``queue`` of the request to admit next."""
+        raise NotImplementedError
+
+    def on_admit(self, req, demand: ServeResource) -> None:
+        """Admission bookkeeping hook (host-side only)."""
+
+    def on_finish(self, req) -> None:
+        """Completion bookkeeping hook (host-side only)."""
+
+
+class FCFSPolicy(AdmissionPolicy):
+    """First come, first served — arrival order, the legacy behavior."""
+
+    name = "fcfs"
+
+    def select(self, queue) -> int:
+        return 0
+
+
+class PriorityPolicy(AdmissionPolicy):
+    """Highest ``Request.priority`` first; FIFO within a priority level."""
+
+    name = "priority"
+
+    def select(self, queue) -> int:
+        return max(range(len(queue)),
+                   key=lambda i: (queue[i].priority, -i))
+
+
+class SJFPolicy(AdmissionPolicy):
+    """Shortest predicted job (prompt + budget) first; FIFO on ties."""
+
+    name = "sjf"
+
+    def select(self, queue) -> int:
+        return min(range(len(queue)),
+                   key=lambda i: (len(queue[i].prompt)
+                                  + queue[i].max_new_tokens, i))
+
+
+class DRFFairPolicy(AdmissionPolicy):
+    """Per-tenant DRF: admit from the tenant with the lowest dominant
+    share of (slots, KV); FIFO within the chosen tenant.  Shares are
+    charged on admission and credited on finish, so a tenant's share is
+    exactly what it holds *right now* — a flood from one tenant queues
+    behind its own share instead of starving everyone else."""
+
+    name = "drf-fair"
+
+    def __init__(self):
+        self.allocator: Optional[DRFAllocator] = None
+
+    def bind(self, total: ServeResource) -> None:
+        self.allocator = DRFAllocator(total, zero=ServeResource())
+
+    def shares(self) -> dict:
+        return {} if self.allocator is None else self.allocator.shares()
+
+    def select(self, queue) -> int:
+        assert self.allocator is not None, "policy not bound to a scheduler"
+        tenants = sorted({r.tenant for r in queue})
+        for t in tenants:
+            self.allocator.register(t)
+        t = self.allocator.next_framework(tenants)
+        return next(i for i, r in enumerate(queue) if r.tenant == t)
+
+    def on_admit(self, req, demand: ServeResource) -> None:
+        self.allocator.charge(req.tenant, demand)
+        req._drf_demand = demand
+
+    def on_finish(self, req) -> None:
+        demand = getattr(req, "_drf_demand", None)
+        if demand is not None:
+            self.allocator.credit(req.tenant, demand)
+            req._drf_demand = None
+
+
+ADMISSION_POLICIES = {
+    "fcfs": FCFSPolicy,
+    "priority": PriorityPolicy,
+    "sjf": SJFPolicy,
+    "drf-fair": DRFFairPolicy,
+}
+
+
+def get_admission_policy(name: str, **kw) -> AdmissionPolicy:
+    if isinstance(name, AdmissionPolicy):
+        return name
+    return ADMISSION_POLICIES[name](**kw)
+
+
+# --------------------------------------------------------------- scheduler
+@dataclass
+class Admission:
+    """One decision: slot ``slot`` admits ``req`` (``kv`` carries the page
+    reservation for the paged cache — prefill start, CoW copies)."""
+
+    slot: int
+    req: object
+    kv: object = None
+
+
+class Scheduler:
+    """Owns the host-side admission state: queue, policy, DRF accounting.
+
+    ``decide()`` is the pure host phase of the engine tick — it assigns
+    queued requests to free slots (reserving KV pages for the paged
+    cache, which is host bookkeeping) and returns the decisions for the
+    engine's executor to apply.  Policies never see device arrays.
+    """
+
+    def __init__(self, policy, *, slots: int, max_len: int, kv=None):
+        self.policy = get_admission_policy(policy)
+        self.slots = slots
+        self.max_len = max_len
+        self.kv = kv
+        self.queue: deque = deque()
+        kv_total = (kv.pool.capacity if kv is not None
+                    else slots * max_len)
+        self.policy.bind(ServeResource(slots=slots, kv=kv_total))
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def demand(self, req) -> ServeResource:
+        """The DRF charge an admission of ``req`` carries."""
+        if self.kv is not None:
+            kv = self.kv.blocks_needed(len(req.prompt), req.max_new_tokens)
+        else:
+            kv = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        return ServeResource(slots=1, kv=kv)
+
+    def decide(self, active) -> list[Admission]:
+        """Assign queued requests to free slots; [] = nothing to admit.
+
+        Paged backpressure: if the policy's chosen request cannot reserve
+        its pages the round stops — the choice stays queued (it is next
+        in line by policy order) and retries when slots drain.
+        """
+        out: list[Admission] = []
+        for s in range(self.slots):
+            if active[s] is not None or not self.queue:
+                continue
+            i = self.policy.select(self.queue)
+            req = self.queue[i]
+            res = None
+            if self.kv is not None:
+                res = self.kv.admit(s, req.prompt, req.max_new_tokens)
+                if res is None:
+                    break  # pool exhausted: retry after slots drain
+            del self.queue[i]
+            self.policy.on_admit(req, self.demand(req))
+            out.append(Admission(slot=s, req=req, kv=res))
+        return out
+
+    def on_finish(self, req) -> None:
+        self.policy.on_finish(req)

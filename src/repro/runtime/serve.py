@@ -1,67 +1,119 @@
-"""Batched serving loop: continuous batching over a fixed slot batch.
+"""Policy-driven serving front-end over the batched decode loop.
 
 The decode step is the ``serve_step`` the dry-run lowers for the decode_32k
 / long_500k cells.  ``ServeEngine`` adds the production affordances around
-it: a request queue, fixed decode slots (static shapes — no recompilation),
-per-slot stop handling, and per-slot admission.
+it: a policy-driven admission scheduler, fixed decode slots (static shapes
+— no recompilation), per-request sampling, per-slot stop handling, and
+streaming request handles.
 
-Admission policy (``mode="continuous"``, the default)
------------------------------------------------------
-Any freed slot immediately admits the next queued request at its *own*
+Request API
+-----------
+``submit`` takes a ``Request`` — prompt, token budget, ``SamplingParams``
+(temperature / top-k / top-p / per-request seed / multi-token stop
+sequences), a ``tenant`` for fairness accounting and a ``priority`` — and
+returns a ``RequestHandle`` whose lifecycle walks ``QUEUED -> PREFILL ->
+DECODE -> FINISHED(reason)`` and whose ``tokens()`` iterator streams output
+tokens as the engine produces them.  Engine construction takes a
+``ServeConfig``; the pre-PR-3 keyword sprawl still works through a
+deprecation shim (see docs/serving.md for the migration table).
+
+Admission scheduling (``ServeConfig.policy``)
+---------------------------------------------
+Each engine tick splits into a *decide* phase — ``runtime/scheduler.py``'s
+``Scheduler.decide()`` assigns queued requests to freed slots under a
+pluggable ``AdmissionPolicy`` (``fcfs`` / ``priority`` / ``sjf`` /
+``drf-fair``), pure host bookkeeping — and an *execute* phase that runs
+the compiled prefill/decode steps for the decisions.  ``drf-fair`` charges
+each tenant's slot-and-KV usage through ``core/drf.py``'s ``DRFAllocator``
+(the paper's Mesos DRF, pointed at serving), so no tenant starves the
+pool.  Policies never touch device state.
+
+Continuous batching (``mode="continuous"``, the default)
+--------------------------------------------------------
+Any freed slot immediately admits the scheduler's next choice at its *own*
 position — there is no wave barrier.  The decode step takes a per-slot
-position vector ``pos[B]`` (free slots parked at -1), so every slot attends
-its own prefix length in one ragged kernel call and work is proportional to
-the tokens actually alive, not ``max_len * wave``.  Prompts are consumed by
-**chunked prefill** where the architecture allows it (attention-only
-plans): the prompt runs through the stack in (1, C) blocks that write the
-KV cache in place — one step per C prompt tokens instead of one step per
-token.  SSM/hybrid plans (conv + SSD state crosses chunk boundaries) fall
-back to per-slot token feeding, still without a wave barrier; their slot
-state is zeroed on admission since SSM state is not masked by position.
+position vector ``pos[B]`` (free slots parked at -1); when any live slot
+samples, the tick dispatches to a sampled variant that additionally takes
+the per-slot sampling arrays (``temp/top_k/top_p/keys``), so every slot
+attends its own prefix and draws its own token in one ragged kernel call
+— rows with ``temperature <= 0`` stay bitwise-greedy, and an all-greedy
+tick never pays the sampling math.  Prompts are consumed by
+**chunked prefill** where the architecture allows it; SSM/hybrid plans
+fall back to per-slot token feeding with slot state zeroed on admission.
 
 ``mode="wave"`` keeps the legacy lockstep engine — admit a fresh wave only
-when every slot is free, all slots decode at one scalar position, prompts
-fed token-by-token — as the baseline ``benchmarks/serve_throughput.py``
-measures continuous batching against (the serving analogue of the paper's
-exclusive, non-co-scheduled mode).
+when every slot is free, all slots decode greedily at one scalar position
+— as the baseline ``benchmarks/serve_throughput.py`` measures continuous
+batching against (the serving analogue of the paper's exclusive,
+non-co-scheduled mode).  Wave mode rejects ``temperature > 0`` requests.
 
 Paged KV cache (``cache="paged"``, continuous mode only)
 --------------------------------------------------------
-The dense layout reserves a ``(max_len)`` HBM stripe per slot no matter
-how short the request.  ``cache="paged"`` swaps it for a global page pool
-(``runtime/kv_pool.py``): admission reserves exactly
-``ceil((prompt + max_new) / page_size)`` pages under a pluggable
-placement policy, ``submit`` queues with **backpressure** when the pool
-is exhausted (``step`` never raises), and pages return to the pool the
-moment a request finishes.  A prefix cache hashes full prompt pages so a
-request sharing a cached prefix is admitted at ``pos = matched`` with the
-shared pages mapped read-only — copy-on-write duplicates a shared page
-only when the admission must write into it.  The decode step consumes
-the ``(slots, max_pages)`` page-table array through the paged Pallas
-kernel's scalar-prefetch contract (``kernels/paged_attention.py``).
+``cache="paged"`` swaps the dense per-slot ``(max_len)`` HBM stripes for a
+global page pool (``runtime/kv_pool.py``): admission reserves exactly
+``ceil((prompt + max_new) / page_size)`` pages, the scheduler queues with
+**backpressure** when the pool is exhausted (``step`` never raises), and a
+prefix cache admits shared prompts at ``pos = matched`` with copy-on-write
+pages.  See docs/paged_kv.md.
 
 All step functions keep static shapes and donate the caches, so each mode
 compiles exactly once per (slots, max_len) and decodes in place.  Dense
 continuous decode additionally picks its split-K fan-out per tick from
 ``(max(pos), live slots)`` (``steps.pick_decode_splits``) when
-``RuntimeKnobs.decode_splits`` is 0 (auto); each chosen fan-out compiles
-once and is cached.
+``RuntimeKnobs.decode_splits`` is 0 (auto).
 """
 from __future__ import annotations
 
+import dataclasses
+import enum
+import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.kv_pool import KVCacheManager
+from repro.runtime.sampling import SamplingParams, matches_stop
+from repro.runtime.scheduler import Scheduler
 from repro.runtime.steps import (make_paged_prefill_chunk_step,
                                  make_paged_serve_step,
                                  make_prefill_chunk_step, make_serve_step,
                                  pick_decode_splits)
+
+__all__ = ["Request", "RequestHandle", "RequestState", "SamplingParams",
+           "ServeConfig", "ServeEngine", "ServeStalled", "request_metrics"]
+
+
+def request_metrics(req: "Request") -> dict:
+    """Per-request latency from the lifecycle stamps: time-to-first-token
+    (``ttft_s``, includes queue wait — the quantity admission policies
+    trade) and time-per-output-token (``tpot_s``).  Entries whose stamps
+    the lifecycle has not reached yet are omitted.  The single source of
+    the formulas — ``RequestHandle.metrics()`` and the benchmarks'
+    percentile aggregation both call this."""
+    out = {}
+    if req.t_submit is not None and req.t_first is not None:
+        out["ttft_s"] = req.t_first - req.t_submit
+    if req.t_first is not None and req.t_finish is not None \
+            and len(req.output) > 1:
+        out["tpot_s"] = (req.t_finish - req.t_first) / (len(req.output) - 1)
+    return out
+
+
+class ServeStalled(RuntimeError):
+    """``run()`` exhausted its tick budget with requests undrained, or a
+    streaming handle stopped making progress."""
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"      # submitted, waiting for the scheduler
+    PREFILL = "prefill"    # consuming the prompt (chunked or token feed)
+    DECODE = "decode"      # generating
+    FINISHED = "finished"  # done; see Request.finish_reason
 
 
 @dataclass
@@ -70,46 +122,161 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_id: int = -1  # -1: never stops early
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    tenant: str = "default"  # drf-fair accounting unit
+    priority: int = 0  # higher admits first under policy="priority"
     output: list = field(default_factory=list)
     done: bool = False
+    state: RequestState = RequestState.QUEUED
+    finish_reason: Optional[str] = None  # "eos" | "stop" | "length"
+    # wall-clock lifecycle stamps (time.perf_counter seconds)
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+
+
+class RequestHandle:
+    """Caller-facing view of a submitted request.
+
+    ``tokens()`` yields output tokens incrementally; when the engine has
+    not yet produced the next token the iterator *drives* it (one
+    ``engine.step()`` per attempt — which also serves every other live
+    slot), so ``for tok in handle.tokens():`` streams a request to
+    completion.  ``result()`` drains and returns the finished ``Request``.
+    """
+
+    def __init__(self, req: Request, engine: "ServeEngine"):
+        self.req = req
+        self._engine = engine
+
+    @property
+    def state(self) -> RequestState:
+        return self.req.state
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        return self.req.finish_reason
+
+    @property
+    def done(self) -> bool:
+        return self.req.done
+
+    @property
+    def output(self) -> list:
+        return list(self.req.output)
+
+    def tokens(self, max_ticks: int = 100_000) -> Iterator[int]:
+        i = stalled = 0
+        while True:
+            while i < len(self.req.output):
+                stalled = 0
+                yield self.req.output[i]
+                i += 1
+            if self.req.done:
+                return
+            self._engine.step()
+            stalled += 1
+            if stalled > max_ticks:
+                raise ServeStalled(
+                    f"request {self.req.req_id} produced no token in "
+                    f"{max_ticks} ticks (state={self.req.state.value})")
+
+    def result(self, max_ticks: int = 100_000) -> Request:
+        for _ in self.tokens(max_ticks=max_ticks):
+            pass
+        return self.req
+
+    def metrics(self) -> dict:
+        """Per-request latency (see ``request_metrics``)."""
+        return request_metrics(self.req)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Engine construction knobs, replacing the pre-PR-3 keyword sprawl.
+
+    ``policy`` names an admission policy from
+    ``runtime.scheduler.ADMISSION_POLICIES``; ``on_stall`` decides whether
+    ``run()`` raises (``"raise"``, default) or warns and returns partial
+    results (``"warn"``) when its tick budget is exhausted with requests
+    undrained."""
+
+    batch_slots: int = 4
+    max_len: int = 128
+    mode: str = "continuous"
+    prefill_chunk: int = 32
+    cache: str = "dense"
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    page_policy: str = "pack"
+    prefix_cache: bool = True
+    policy: str = "fcfs"
+    on_stall: str = "raise"
+
+
+_CONFIG_FIELDS = {f.name for f in dataclasses.fields(ServeConfig)}
 
 
 class ServeEngine:
-    def __init__(self, model, params, *, batch_slots: int, max_len: int,
-                 mode: str = "continuous", prefill_chunk: int = 32,
-                 mesh=None, cache_shardings=None, cache: str = "dense",
-                 page_size: int = 16, num_pages: Optional[int] = None,
-                 page_policy: str = "pack", prefix_cache: bool = True):
-        assert mode in ("continuous", "wave"), mode
-        assert cache in ("dense", "paged"), cache
+    def __init__(self, model, params, config: Optional[ServeConfig] = None,
+                 *, mesh=None, cache_shardings=None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either a ServeConfig or legacy keyword arguments, "
+                    "not both")
+            unknown = set(legacy) - _CONFIG_FIELDS
+            if unknown:
+                raise TypeError(f"unknown ServeEngine arguments: "
+                                f"{sorted(unknown)}")
+            warnings.warn(
+                "ServeEngine(batch_slots=..., max_len=..., ...) keyword "
+                "construction is deprecated; pass ServeConfig(...) instead "
+                "(see docs/serving.md for the migration table)",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig(**legacy)
+        elif config is None:
+            config = ServeConfig()
+        assert config.mode in ("continuous", "wave"), config.mode
+        assert config.cache in ("dense", "paged"), config.cache
+        assert config.on_stall in ("raise", "warn"), config.on_stall
+        self.config = config
         self.model = model
         self.params = params
-        self.slots = batch_slots
-        self.max_len = max_len
-        self.mode = mode
+        self.slots = config.batch_slots
+        self.max_len = config.max_len
+        self.mode = config.mode
         self.mesh = mesh
-        self.cache = cache
-        self.queue: deque[Request] = deque()
+        self.cache = config.cache
+        batch_slots, max_len = config.batch_slots, config.max_len
         self.active: list[Optional[Request]] = [None] * batch_slots
         self.pos = np.full(batch_slots, -1, dtype=np.int32)
         self.tokens = np.zeros((batch_slots, 1), dtype=np.int32)
+        # per-slot sampling arrays: one compiled step serves any mix of
+        # greedy (temp 0) and sampled requests
+        self.samp_temp = np.zeros(batch_slots, np.float32)
+        self.samp_topk = np.zeros(batch_slots, np.int32)
+        self.samp_topp = np.ones(batch_slots, np.float32)
+        self.samp_keys = np.zeros((batch_slots, 2), np.uint32)
         self._finished: list[Request] = []
         self._admit_emitted = 0  # tokens emitted by chunked prefill
         self._decode_one = jax.jit(model.decode_step, donate_argnums=(1,))
         self.kv: Optional[KVCacheManager] = None
-        if cache == "paged":
-            if mode != "continuous":
+        if config.cache == "paged":
+            if config.mode != "continuous":
                 raise ValueError("cache='paged' requires mode='continuous'")
             if not model.supports_paged_cache():
                 raise ValueError(
                     f"paged KV cache unsupported for "
                     f"family={model.cfg.family!r}")
+            page_size = config.page_size
             if max_len % page_size:
                 raise ValueError(f"max_len {max_len} not a multiple of "
                                  f"page_size {page_size}")
             # prefill chunks must cover whole pages at page-aligned
             # offsets; C also divides max_len so chunk writes never clamp
-            c = max(page_size, (min(prefill_chunk, max_len) // page_size)
+            c = max(page_size,
+                    (min(config.prefill_chunk, max_len) // page_size)
                     * page_size)
             while max_len % c:
                 c -= page_size
@@ -117,45 +284,75 @@ class ServeEngine:
             self.chunked = True
             # dense-equivalent capacity by default (+ the null page);
             # benchmarks pass a smaller pool to realize the HBM saving
+            num_pages = config.num_pages
             if num_pages is None:
                 num_pages = batch_slots * (max_len // page_size) + 1
             self.kv = KVCacheManager(
                 slots=batch_slots, max_len=max_len, page_size=page_size,
-                num_pages=num_pages, policy=page_policy,
-                prefix_cache=prefix_cache, chunk=c)
+                num_pages=num_pages, policy=config.page_policy,
+                prefix_cache=config.prefix_cache, chunk=c)
             self.caches = model.init_cache_paged(num_pages, page_size)
-            self._step = jax.jit(make_paged_serve_step(model, page_size),
-                                 donate_argnums=(1,))
+            # greedy and sampled variants both exist (jit is lazy — only
+            # the ones a trace actually hits compile); a tick pays the
+            # sampling math only when a live slot has temperature > 0
+            self._step = jax.jit(
+                make_paged_serve_step(model, page_size),
+                donate_argnums=(1,))
+            self._step_sampled = jax.jit(
+                make_paged_serve_step(model, page_size, sampled=True),
+                donate_argnums=(1,))
             self._prefill = jax.jit(
                 make_paged_prefill_chunk_step(model, page_size),
+                donate_argnums=(1,))
+            self._prefill_sampled = jax.jit(
+                make_paged_prefill_chunk_step(model, page_size,
+                                              sampled=True),
                 donate_argnums=(1,))
         else:
             self.caches = model.init_cache(batch_slots, max_len)
             self._step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+            self._step_sampled = jax.jit(make_serve_step(model, sampled=True),
+                                         donate_argnums=(1,))
             # chunked prefill: one compiled (1, C) step reused for every
             # slot and offset; C rounded down to a divisor of max_len so
             # padded chunk writes never clamp out of bounds.
-            self.chunked = (mode == "continuous" and prefill_chunk > 1
+            self.chunked = (config.mode == "continuous"
+                            and config.prefill_chunk > 1
                             and model.supports_chunked_prefill())
-            c = max(1, min(prefill_chunk, max_len))
+            c = max(1, min(config.prefill_chunk, max_len))
             while max_len % c:
                 c -= 1
             self.prefill_chunk = c
             if self.chunked:
-                self._prefill = jax.jit(make_prefill_chunk_step(model),
-                                        donate_argnums=(1,))
+                self._prefill = jax.jit(
+                    make_prefill_chunk_step(model),
+                    donate_argnums=(1,))
+                self._prefill_sampled = jax.jit(
+                    make_prefill_chunk_step(model, sampled=True),
+                    donate_argnums=(1,))
         if cache_shardings is not None:
             self.caches = jax.device_put(self.caches, cache_shardings)
+        # decide/execute split: the scheduler owns the queue, the policy,
+        # and (drf-fair) the per-tenant accounting — host state only
+        self.scheduler = Scheduler(config.policy, slots=batch_slots,
+                                   max_len=max_len, kv=self.kv)
         # split-K autotune (dense Pallas decode only): pick the fan-out
         # per tick from (max(pos), live slots); each compiles once.
-        self._autotune = (cache == "dense" and mode == "continuous"
+        self._autotune = (config.cache == "dense"
+                          and config.mode == "continuous"
                           and model.knobs.use_pallas
                           and model.knobs.decode_splits == 0)
-        self._step_by_splits = {1: self._step}
+        self._step_by_splits = {(1, False): self._step,
+                                (1, True): self._step_sampled}
         # SSM/hybrid state is not position-masked: zero a slot on admission
         self._needs_reset = model.cfg.family in ("ssm", "hybrid")
         if self._needs_reset:
             self._reset = self._make_slot_reset(model, max_len)
+
+    @property
+    def queue(self) -> deque:
+        """The scheduler's admission queue (read-mostly; use submit())."""
+        return self.scheduler.queue
 
     @staticmethod
     def _make_slot_reset(model, max_len):
@@ -180,11 +377,15 @@ class ServeEngine:
 
         return jax.jit(reset, donate_argnums=(0,))
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> RequestHandle:
         if not 0 < len(req.prompt) < self.max_len:
             raise ValueError(
                 f"prompt length {len(req.prompt)} outside [1, "
                 f"{self.max_len - 1}] for max_len={self.max_len}")
+        if self.mode == "wave" and req.sampling.temperature > 0:
+            raise ValueError(
+                "sampled decode (temperature > 0) requires "
+                "mode='continuous'; wave mode is the greedy baseline")
         if self.kv is not None and not self.kv.fits_ever(
                 len(req.prompt), req.max_new_tokens):
             raise ValueError(
@@ -192,62 +393,85 @@ class ServeEngine:
                 f"(prompt {len(req.prompt)} + max_new {req.max_new_tokens} "
                 f"vs {self.kv.pool.capacity} pages of "
                 f"{self.kv.page_size})")
-        self.queue.append(req)
+        req.state = RequestState.QUEUED
+        req.t_submit = time.perf_counter()
+        self.scheduler.submit(req)
+        return RequestHandle(req, self)
 
     # ------------------------------------------------------------ admission
-    def _finish(self, s: int):
+    def _emit(self, req: Request, tok: int):
+        if not req.output:
+            req.t_first = time.perf_counter()
+        req.output.append(tok)
+
+    def _finish(self, s: int, reason: str):
         req = self.active[s]
         req.done = True
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        req.t_finish = time.perf_counter()
         self.active[s] = None
         self.pos[s] = -1
         self.tokens[s, 0] = 0
+        self.samp_temp[s] = 0.0
+        self.samp_topk[s] = 0
+        self.samp_topp[s] = 1.0
+        self.samp_keys[s] = 0
         if self.kv is not None:
             self.kv.free_slot(s)  # pages return to the pool immediately
+        self.scheduler.on_finish(req)
         self._finished.append(req)
 
-    def _admit_continuous(self):
-        """Per-slot admission: every free slot takes the next request now.
+    def _execute_admission(self, adm):
+        """Executor half of admission: apply one scheduler decision —
+        device prefill / slot reset / token-feed setup."""
+        s, req = adm.slot, adm.req
+        self.active[s] = req
+        req.state = RequestState.PREFILL
+        sp = req.sampling
+        self.samp_temp[s] = sp.temperature
+        self.samp_topk[s] = sp.top_k
+        self.samp_topp[s] = sp.top_p
+        self.samp_keys[s] = sp.key_data(req.req_id)
+        if self.kv is not None:
+            # CoW pages (adm.kv.cow) need no device copy here: they span
+            # [start, matched), so the first re-run prefill chunk rewrites
+            # every one of them in full (chunks write whole pages) before
+            # anything reads them
+            self._prefill_slot(s, req, start=adm.kv.start)
+            # prefill already produced the first token; the request may
+            # complete before a single decode tick runs, in which case
+            # the freed slot admits again immediately
+            if not self._maybe_stop(s):
+                req.state = RequestState.DECODE
+            return
+        if self._needs_reset:
+            self.caches = self._reset(self.caches, jnp.int32(s))
+        if self.chunked:
+            self._prefill_slot(s, req)
+            if not self._maybe_stop(s):
+                req.state = RequestState.DECODE
+        else:
+            req._feed = deque(req.prompt.tolist())  # type: ignore
+            self.tokens[s, 0] = req._feed.popleft()
+            self.pos[s] = 0
 
-        Paged mode reserves the request's pages first; if the pool cannot
-        supply them the request stays queued (FIFO backpressure) and the
-        tick proceeds with the slots already live — ``step`` never raises
-        on exhaustion.
-        """
-        for s in range(self.slots):
-            while self.active[s] is None and self.queue:
-                if self.kv is not None:
-                    req = self.queue[0]
-                    res = self.kv.admit(s, req.prompt, req.max_new_tokens)
-                    if res is None:
-                        return  # backpressure: retry after slots drain
-                    self.queue.popleft()
-                    self.active[s] = req
-                    # CoW pages (res.cow) need no device copy here: they
-                    # span [start, matched), so the first re-run prefill
-                    # chunk rewrites every one of them in full (chunks
-                    # write whole pages) before anything reads them
-                    self._prefill_slot(s, req, start=res.start)
-                    self._maybe_stop(s)
-                    continue
-                req = self.queue.popleft()
-                self.active[s] = req
-                if self._needs_reset:
-                    self.caches = self._reset(self.caches, jnp.int32(s))
-                if self.chunked:
-                    self._prefill_slot(s, req)
-                    # prefill already produced the first token; the request
-                    # may complete before a single decode tick runs, in
-                    # which case the freed slot admits again immediately
-                    self._maybe_stop(s)
-                else:
-                    req._feed = deque(req.prompt.tolist())  # type: ignore
-                    self.tokens[s, 0] = req._feed.popleft()
-                    self.pos[s] = 0
+    def _admit_continuous(self):
+        """Decide/execute rounds until the scheduler has nothing to admit
+        (a prefilled request can finish instantly and free its slot for
+        the same tick, hence the loop)."""
+        while True:
+            decisions = self.scheduler.decide(self.active)
+            if not decisions:
+                return
+            for adm in decisions:
+                self._execute_admission(adm)
 
     def _prefill_slot(self, s: int, req: Request, start: int = 0):
         """Run the slot's prompt tokens [start, prompt_len) through the
-        stack in (1, C) chunks, writing the KV cache in place; the last
-        real token's logits seed decode at pos = prompt_len.
+        stack in (1, C) chunks, writing the KV cache in place; the token
+        drawn from the last real token's logits (greedy or sampled, per
+        the request) seeds decode at pos = prompt_len.
 
         ``start`` (paged mode, a multiple of C and <= prompt_len - 1) is
         where the prefix cache left off; the paged step additionally
@@ -260,28 +484,47 @@ class ServeEngine:
         padded = np.zeros(n_chunks * c, np.int32)
         padded[:p - start] = prompt[start:]
         req._feed = deque()  # type: ignore
+        sp = req.sampling
+        sampling = sp.temperature > 0
         extra = (() if self.kv is None
                  else (jnp.asarray(self.kv.page_table),))
+        samp = (() if not sampling else
+                (jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                 jnp.float32(sp.top_p),
+                 jnp.asarray(sp.key_data(req.req_id))))
+        prefill = self._prefill_sampled if sampling else self._prefill
         nxt = None
         for ci in range(n_chunks):
+            last = (p - start - 1) - ci * c  # final-chunk row of the
+            last_row = last if 0 <= last < c else 0  # last real token
             chunk = jnp.asarray(padded[None, ci * c:(ci + 1) * c])
-            nxt, self.caches = self._prefill(
-                self.params, self.caches, chunk, jnp.int32(s),
-                jnp.int32(start + ci * c), *extra)
-        tok = int(np.asarray(nxt)[(p - start - 1) - (n_chunks - 1) * c])
+            if sampling:
+                nxt, self.caches = prefill(
+                    self.params, self.caches, chunk, jnp.int32(s),
+                    jnp.int32(start + ci * c), *extra,
+                    jnp.int32(last_row), *samp)
+            else:
+                nxt, self.caches = prefill(
+                    self.params, self.caches, chunk, jnp.int32(s),
+                    jnp.int32(start + ci * c), *extra)
+        tok = (int(np.asarray(nxt)) if sampling
+               else int(np.asarray(nxt)[(p - start - 1)
+                                        - (n_chunks - 1) * c]))
         self.pos[s] = p
         self.tokens[s, 0] = tok
-        req.output.append(tok)
+        self._emit(req, tok)
         self._admit_emitted += 1
         if self.kv is not None:
             self.kv.register_prefix(s, prompt)
 
     def _maybe_stop(self, s: int) -> bool:
         req = self.active[s]
-        if (len(req.output) >= req.max_new_tokens
-                or (req.output and req.output[-1] == req.eos_id)
-                or self.pos[s] >= self.max_len - 1):
-            self._finish(s)
+        reason = matches_stop(req.output, req.sampling, req.eos_id)
+        if reason is None and (len(req.output) >= req.max_new_tokens
+                               or self.pos[s] >= self.max_len - 1):
+            reason = "length"
+        if reason is not None:
+            self._finish(s, reason)
             return True
         return False
 
@@ -289,17 +532,17 @@ class ServeEngine:
     def _admit_wave(self):
         """Wave batching: admit a fresh wave only when every slot is free —
         all slots then decode in lockstep at one scalar position (static
-        shapes, exact cache indexing).  Prompts are fed token-by-token."""
+        shapes, exact cache indexing).  Prompts are fed token-by-token;
+        the admission *order* still follows the configured policy."""
         if any(r is not None for r in self.active) or not self.queue:
             return
         self.caches = jax.tree.map(lambda c: jnp.zeros_like(c), self.caches)
         self.pos[:] = 0
         self.tokens[:] = 0
-        for s in range(self.slots):
-            if not self.queue:
-                break
-            req = self.queue.popleft()
+        for adm in self.scheduler.decide(self.active):
+            s, req = adm.slot, adm.req
             self.active[s] = req
+            req.state = RequestState.PREFILL
             req._feed = deque(req.prompt.tolist())  # type: ignore
             self.tokens[s, 0] = req._feed.popleft()
 
@@ -310,16 +553,18 @@ class ServeEngine:
             return self._step_wave()
         return self._step_continuous()
 
-    def _step_for_splits(self, splits: int):
+    def _step_for_splits(self, splits: int, sampled: bool):
         """Dense decode step with a given split-K fan-out, compiled once
-        per fan-out (the small set the heuristic emits: 1, 2, 4, 8)."""
-        fn = self._step_by_splits.get(splits)
+        per (fan-out, sampled) pair (fan-outs from the small set the
+        heuristic emits: 1, 2, 4, 8)."""
+        fn = self._step_by_splits.get((splits, sampled))
         if fn is None:
             model = type(self.model)(
                 self.model.cfg,
                 self.model.knobs.with_(decode_splits=splits))
-            fn = jax.jit(make_serve_step(model), donate_argnums=(1,))
-            self._step_by_splits[splits] = fn
+            fn = jax.jit(make_serve_step(model, sampled=sampled),
+                         donate_argnums=(1,))
+            self._step_by_splits[(splits, sampled)] = fn
         return fn
 
     def _step_continuous(self) -> int:
@@ -330,17 +575,26 @@ class ServeEngine:
         if not live:
             return emitted
         pos = jnp.asarray(self.pos)
+        # pay the sampling math only when a live slot actually samples
+        # (finished slots reset their temp to 0)
+        sampling = bool(self.samp_temp.max() > 0)
+        samp = (() if not sampling else
+                (jnp.asarray(self.samp_temp), jnp.asarray(self.samp_topk),
+                 jnp.asarray(self.samp_topp), jnp.asarray(self.samp_keys)))
         if self.kv is not None:
-            nxt_dev, self.caches = self._step(
+            step = self._step_sampled if sampling else self._step
+            nxt_dev, self.caches = step(
                 self.params, self.caches, jnp.asarray(self.tokens), pos,
-                jnp.asarray(self.kv.page_table))
+                jnp.asarray(self.kv.page_table), *samp)
         else:
-            step = self._step
+            step = self._step_sampled if sampling else self._step
             if self._autotune:
                 step = self._step_for_splits(pick_decode_splits(
-                    int(self.pos.max()), live, max_len=self.max_len))
+                    int(self.pos.max()), live, max_len=self.max_len),
+                    sampling)
             nxt_dev, self.caches = step(self.params, self.caches,
-                                        jnp.asarray(self.tokens), pos)
+                                        jnp.asarray(self.tokens), pos,
+                                        *samp)
         nxt = np.asarray(nxt_dev)
         for s, req in enumerate(self.active):
             if req is None:
@@ -350,8 +604,10 @@ class ServeEngine:
             if feed:  # still consuming the prompt (token-feed path)
                 self.tokens[s, 0] = feed.popleft()
                 continue
+            if req.state is RequestState.PREFILL:  # token-feed path done
+                req.state = RequestState.DECODE
             tok = int(nxt[s, 0])
-            req.output.append(tok)
+            self._emit(req, tok)
             emitted += 1
             self.tokens[s, 0] = tok
             self._maybe_stop(s)
@@ -375,16 +631,13 @@ class ServeEngine:
             if feed:  # still consuming the prompt
                 self.tokens[s, 0] = feed.popleft()
                 continue
+            if req.state is RequestState.PREFILL:
+                req.state = RequestState.DECODE
             tok = int(nxt[s])
-            req.output.append(tok)
+            self._emit(req, tok)
             emitted += 1
             self.tokens[s, 0] = tok
-            if (len(req.output) >= req.max_new_tokens
-                    or tok == req.eos_id
-                    or self.pos[s] >= self.max_len - 1):
-                req.done = True
-                self.active[s] = None
-                self._finished.append(req)
+            self._maybe_stop(s)
         return emitted
 
     # ------------------------------------------------------------- metrics
@@ -400,10 +653,31 @@ class ServeEngine:
             stats.update(self.kv.stats())
         return stats
 
-    def run(self, max_ticks: int = 10_000) -> list[Request]:
+    def run(self, max_ticks: int = 10_000,
+            on_stall: Optional[str] = None) -> list[Request]:
+        """Drive the engine until every request drains.
+
+        If ``max_ticks`` is exhausted with requests still queued or
+        active, the stall is *reported*, never silently truncated:
+        ``on_stall="raise"`` (the default, from ``ServeConfig``) raises
+        ``ServeStalled``; ``"warn"`` emits a ``RuntimeWarning`` carrying
+        the undrained counts and returns the partial results."""
+        stall_mode = on_stall or self.config.on_stall
+        if stall_mode not in ("raise", "warn"):
+            raise ValueError(f"on_stall must be 'raise' or 'warn': "
+                             f"{stall_mode!r}")
         ticks = 0
-        while ((self.queue or any(r is not None for r in self.active))
-               and ticks < max_ticks):
+        while self.queue or any(r is not None for r in self.active):
+            if ticks >= max_ticks:
+                queued = len(self.queue)
+                live = sum(r is not None for r in self.active)
+                msg = (f"ServeEngine.run() exhausted {max_ticks} ticks "
+                       f"with {queued + live} requests undrained "
+                       f"({queued} queued, {live} active)")
+                if stall_mode == "raise":
+                    raise ServeStalled(msg)
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
+                break
             self.step()
             ticks += 1
         finished, self._finished = self._finished, []

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.runtime.sampling import sample_tokens
 
 
 def init_train_state(model, rng, moments_dtype=jnp.float32) -> dict:
@@ -91,37 +92,69 @@ def make_prefill_step(model) -> Callable:
     return prefill_step
 
 
-def make_serve_step(model) -> Callable:
-    """Greedy decode step.  ``pos`` is a scalar (lockstep wave batching) or
-    a (B,) vector of per-slot positions (ragged continuous batching; free
-    slots parked at -1 issue no attention work on the Pallas path)."""
+def make_serve_step(model, sampled: bool = False) -> Callable:
+    """Decode step.  ``pos`` is a scalar (lockstep wave batching) or a (B,)
+    vector of per-slot positions (ragged continuous batching; free slots
+    parked at -1 issue no attention work on the Pallas path).
+
+    ``sampled=True`` grows the signature by the per-slot sampling arrays
+    (``temp[B]``, ``top_k[B]``, ``top_p[B]``, ``keys[B, 2]``) and draws
+    through ``runtime.sampling.sample_tokens`` — rows with ``temp <= 0``
+    still return the bitwise-greedy argmax, so one compiled step serves
+    any mix of greedy and sampled requests."""
     def serve_step(params, caches, tokens, pos):
         logits, new_caches = model.decode_step(params, caches, tokens, pos)
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return next_tokens, new_caches
 
-    return serve_step
+    def sampled_serve_step(params, caches, tokens, pos, temp, top_k, top_p,
+                           keys):
+        logits, new_caches = model.decode_step(params, caches, tokens, pos)
+        next_tokens = sample_tokens(logits, pos, temp, top_k, top_p,
+                                    keys)[:, None]
+        return next_tokens, new_caches
+
+    return sampled_serve_step if sampled else serve_step
 
 
-def make_prefill_chunk_step(model) -> Callable:
+def make_prefill_chunk_step(model, sampled: bool = False) -> Callable:
     """Chunked prefill step: run ONE slot's prompt chunk (1, C) at absolute
     offset through the stack, writing K/V into the batched cache in place.
     Returns (next-token int32 per chunk row (C,), new caches) so the engine
-    can read the row of the last real prompt token."""
+    can read the row of the last real prompt token.
+
+    ``sampled=True`` instead returns a scalar int32: the token drawn from
+    logits row ``last_row`` (the last real prompt token on the final
+    chunk; pass 0 for don't-care earlier chunks) under the request's
+    sampling params — the first generated token.  The fold position is
+    the token's absolute position ``offset + last_row``, one below the
+    first decode-step fold, so prefill and decode draws never collide."""
     def prefill_chunk_step(params, caches, tokens, slot, offset):
         logits, new_caches = model.prefill_chunk_step(params, caches, tokens,
                                                       slot, offset)
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tokens, new_caches
 
-    return prefill_chunk_step
+    def sampled_chunk_step(params, caches, tokens, slot, offset, last_row,
+                           temp, top_k, top_p, key):
+        logits, new_caches = model.prefill_chunk_step(params, caches, tokens,
+                                                      slot, offset)
+        row = jax.lax.dynamic_index_in_dim(logits, last_row, 0,
+                                           keepdims=True)
+        tok = sample_tokens(row, (offset + last_row)[None], temp[None],
+                            top_k[None], top_p[None], key[None])[0]
+        return tok, new_caches
+
+    return sampled_chunk_step if sampled else prefill_chunk_step
 
 
 # ------------------------------------------------------------------- paged
-def make_paged_serve_step(model, page_size: int) -> Callable:
-    """Greedy decode step over a paged KV cache: identical to
-    ``make_serve_step`` plus the scalar-prefetched ``page_idx (B,
-    max_pages)`` page-table array (``page_size`` is static)."""
+def make_paged_serve_step(model, page_size: int,
+                          sampled: bool = False) -> Callable:
+    """Decode step over a paged KV cache: identical to ``make_serve_step``
+    plus the scalar-prefetched ``page_idx (B, max_pages)`` page-table
+    array (``page_size`` is static); ``sampled=True`` appends the same
+    per-slot sampling arrays as the dense variant."""
     def serve_step(params, caches, tokens, pos, page_idx):
         logits, new_caches = model.decode_step_paged(params, caches, tokens,
                                                      pos, page_idx,
@@ -129,12 +162,23 @@ def make_paged_serve_step(model, page_size: int) -> Callable:
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return next_tokens, new_caches
 
-    return serve_step
+    def sampled_serve_step(params, caches, tokens, pos, page_idx, temp,
+                           top_k, top_p, keys):
+        logits, new_caches = model.decode_step_paged(params, caches, tokens,
+                                                     pos, page_idx,
+                                                     page_size=page_size)
+        next_tokens = sample_tokens(logits, pos, temp, top_k, top_p,
+                                    keys)[:, None]
+        return next_tokens, new_caches
+
+    return sampled_serve_step if sampled else serve_step
 
 
-def make_paged_prefill_chunk_step(model, page_size: int) -> Callable:
+def make_paged_prefill_chunk_step(model, page_size: int,
+                                  sampled: bool = False) -> Callable:
     """Paged chunked prefill: the (1, C) chunk lands in the physical pages
-    the slot's page-table row maps (C a page multiple, offset aligned)."""
+    the slot's page-table row maps (C a page multiple, offset aligned);
+    ``sampled=True`` mirrors ``make_prefill_chunk_step(sampled=True)``."""
     def prefill_chunk_step(params, caches, tokens, slot, offset, page_idx):
         logits, new_caches = model.prefill_chunk_step_paged(
             params, caches, tokens, slot, offset, page_idx,
@@ -142,7 +186,18 @@ def make_paged_prefill_chunk_step(model, page_size: int) -> Callable:
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tokens, new_caches
 
-    return prefill_chunk_step
+    def sampled_chunk_step(params, caches, tokens, slot, offset, page_idx,
+                           last_row, temp, top_k, top_p, key):
+        logits, new_caches = model.prefill_chunk_step_paged(
+            params, caches, tokens, slot, offset, page_idx,
+            page_size=page_size)
+        row = jax.lax.dynamic_index_in_dim(logits, last_row, 0,
+                                           keepdims=True)
+        tok = sample_tokens(row, (offset + last_row)[None], temp[None],
+                            top_k[None], top_p[None], key[None])[0]
+        return tok, new_caches
+
+    return sampled_chunk_step if sampled else prefill_chunk_step
 
 
 # -------------------------------------------------------- split-K autotune

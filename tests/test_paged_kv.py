@@ -18,7 +18,7 @@ from repro.models.attention import (paged_cache_update,
 from repro.runtime.kv_pool import (KV_PAGE_POLICIES, KVCacheManager,
                                    PagePool, PoolExhausted, PrefixCache,
                                    get_page_policy)
-from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.serve import Request, ServeConfig, ServeEngine
 from repro.runtime.steps import pick_decode_splits
 
 RNG = np.random.default_rng(11)
@@ -379,8 +379,9 @@ def test_paged_engine_matches_dense_outputs():
     params = model.init(jax.random.PRNGKey(0))
     outs = {}
     for cache in ("dense", "paged"):
-        eng = ServeEngine(model, params, batch_slots=2, max_len=32,
-                          cache=cache, page_size=8)
+        eng = ServeEngine(model, params,
+                          ServeConfig(batch_slots=2, max_len=32,
+                                      cache=cache, page_size=8))
         for r in _shared_prefix_trace(7, shared_len=9):
             eng.submit(Request(r.req_id, r.prompt.copy(),
                                max_new_tokens=r.max_new_tokens))
@@ -399,9 +400,10 @@ def test_paged_engine_pool_exhaustion_backpressure_and_drain():
     # 8 usable pages of 8 = 64 positions, vs 2 slots * max_len 32 = 64
     # dense positions, but requests need 3 pages each -> at most 2 live;
     # queue depth forces multiple backpressure/drain cycles
-    eng = ServeEngine(model, params, batch_slots=2, max_len=32,
-                      cache="paged", page_size=8, num_pages=9,
-                      prefix_cache=False)
+    eng = ServeEngine(model, params,
+                      ServeConfig(batch_slots=2, max_len=32, cache="paged",
+                                  page_size=8, num_pages=9,
+                                  prefix_cache=False))
     rng = np.random.default_rng(0)
     for i in range(6):
         eng.submit(Request(i, rng.integers(0, 64, size=12)
@@ -415,8 +417,9 @@ def test_paged_engine_pool_exhaustion_backpressure_and_drain():
 def test_paged_engine_rejects_impossible_request_at_submit():
     model = _tiny_model()
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=1, max_len=32,
-                      cache="paged", page_size=8, num_pages=3)
+    eng = ServeEngine(model, params,
+                      ServeConfig(batch_slots=1, max_len=32, cache="paged",
+                                  page_size=8, num_pages=3))
     with pytest.raises(ValueError):
         eng.submit(Request(0, np.zeros(20, np.int32), max_new_tokens=8))
 
@@ -425,14 +428,15 @@ def test_paged_engine_requires_continuous_attention():
     model = _tiny_model()
     params = model.init(jax.random.PRNGKey(0))
     with pytest.raises(ValueError):
-        ServeEngine(model, params, batch_slots=1, max_len=32, mode="wave",
-                    cache="paged")
+        ServeEngine(model, params,
+                    ServeConfig(batch_slots=1, max_len=32, mode="wave",
+                                cache="paged"))
     ssm_cfg = dataclasses.replace(get_config("mamba2-1.3b", smoke=True),
                                   vocab_size=64)
     ssm = LM(ssm_cfg, RuntimeKnobs(cache_dtype=jnp.float32))
     with pytest.raises(ValueError):
-        ServeEngine(ssm, ssm.init(jax.random.PRNGKey(0)), batch_slots=1,
-                    max_len=32, cache="paged")
+        ServeEngine(ssm, ssm.init(jax.random.PRNGKey(0)),
+                    ServeConfig(batch_slots=1, max_len=32, cache="paged"))
 
 
 def test_prefix_cache_skips_prefill_work():
@@ -440,8 +444,9 @@ def test_prefix_cache_skips_prefill_work():
     engine's prefix stats show hits and the matched length."""
     model = _tiny_model()
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=1, max_len=32,
-                      cache="paged", page_size=8, prefill_chunk=8)
+    eng = ServeEngine(model, params,
+                      ServeConfig(batch_slots=1, max_len=32, cache="paged",
+                                  page_size=8, prefill_chunk=8))
     prompt = np.arange(16, dtype=np.int32)
     eng.submit(Request(0, prompt, max_new_tokens=2))
     eng.run()
@@ -485,6 +490,9 @@ def test_pick_decode_splits_heuristic():
 def test_autotune_enabled_only_for_dense_pallas_auto():
     model = _tiny_model()  # use_pallas=False
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=1, max_len=32)
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=1,
+                                                 max_len=32))
     assert not eng._autotune  # XLA path: nothing to tune
-    assert 1 in eng._step_by_splits
+    # seeded with the single-pass step, one entry per (greedy, sampled)
+    assert (1, False) in eng._step_by_splits
+    assert (1, True) in eng._step_by_splits

@@ -14,7 +14,7 @@ from repro.kernels.decode_attention import (decode_attention_splitk_tpu,
 from repro.kernels.ref import decode_attention_ref
 from repro.models import LM, RuntimeKnobs
 from repro.models.attention import decode_attention_xla
-from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.serve import Request, ServeConfig, ServeEngine
 
 RNG = np.random.default_rng(7)
 
@@ -145,7 +145,9 @@ def test_continuous_engine_matches_wave_outputs(arch, extra):
     rng = np.random.default_rng(3)
     outs = {}
     for mode in ("wave", "continuous"):
-        eng = ServeEngine(model, params, batch_slots=2, max_len=32, mode=mode)
+        eng = ServeEngine(model, params,
+                          ServeConfig(batch_slots=2, max_len=32,
+                                      mode=mode))
         for i in range(5):
             eng.submit(Request(i, rng.integers(0, 64, size=int(
                 rng.integers(1, 6))).astype(np.int32), max_new_tokens=4))
@@ -170,7 +172,9 @@ def test_continuous_engine_admits_into_freed_slot_without_wave_barrier():
 
     ticks = {}
     for mode in ("continuous", "wave"):
-        eng = ServeEngine(model, params, batch_slots=2, max_len=32, mode=mode)
+        eng = ServeEngine(model, params,
+                          ServeConfig(batch_slots=2, max_len=32,
+                                      mode=mode))
         load(eng)
         n = 0
         while eng.queue or any(r is not None for r in eng.active):
@@ -186,7 +190,7 @@ def test_max_new_tokens_one_completes_at_prefill():
     counts the prefill-emitted tokens."""
     model = _tiny_model()
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=1, max_len=32)
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=1, max_len=32))
     assert eng.chunked
     for i in range(3):
         eng.submit(Request(i, np.array([i + 1], np.int32), max_new_tokens=1))
@@ -202,7 +206,7 @@ def test_max_new_tokens_one_completes_at_prefill():
 def test_submit_rejects_bad_prompt_lengths():
     model = _tiny_model()
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=1, max_len=16)
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=1, max_len=16))
     with pytest.raises(ValueError):
         eng.submit(Request(0, np.zeros(0, np.int32)))
     with pytest.raises(ValueError):

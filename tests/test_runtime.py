@@ -12,7 +12,7 @@ from repro.models import LM, RuntimeKnobs
 from repro.optim import AdamWConfig
 from repro.runtime.fault import (FailureInjector, SimulatedHostFailure,
                                  StepWatchdog, run_with_failures)
-from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.serve import Request, ServeConfig, ServeEngine
 from repro.runtime.train import TrainConfig, Trainer
 
 
@@ -103,7 +103,7 @@ def test_watchdog_flags_injected_straggle(monkeypatch):
 def test_serve_engine_greedy_matches_manual_decode():
     model = _tiny_model()
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=2, max_len=32)
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=2, max_len=32))
     prompts = [np.array([3, 5, 7], np.int32), np.array([11, 2], np.int32)]
     for i, p in enumerate(prompts):
         eng.submit(Request(i, p, max_new_tokens=5))
@@ -132,7 +132,7 @@ def test_serve_engine_greedy_matches_manual_decode():
 def test_serve_engine_recycles_slots_in_waves():
     model = _tiny_model()
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, batch_slots=2, max_len=16)
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=2, max_len=16))
     for i in range(5):
         eng.submit(Request(i, np.array([i + 1], np.int32),
                            max_new_tokens=3))

@@ -1,0 +1,397 @@
+"""Policy-driven serving front-end: admission policies (two-tenant DRF
+fairness vs FCFS starvation), SamplingParams (temp-0 bitwise-greedy across
+dense/paged, top-k/top-p membership, seeded determinism), ServeConfig +
+legacy-kwargs shim, RequestHandle lifecycle/streaming, run() stall
+reporting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import LM, RuntimeKnobs
+from repro.runtime.sampling import SamplingParams, matches_stop, sample_tokens
+from repro.runtime.scheduler import (ADMISSION_POLICIES, Scheduler,
+                                     ServeResource, get_admission_policy)
+from repro.runtime.serve import (Request, RequestState, ServeConfig,
+                                 ServeEngine, ServeStalled)
+
+_CACHE = {}
+
+
+def _model():
+    if "model" not in _CACHE:
+        cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                                  num_layers=2, vocab_size=64)
+        model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+        _CACHE["model"] = model
+        _CACHE["params"] = model.init(jax.random.PRNGKey(0))
+    return _CACHE["model"], _CACHE["params"]
+
+
+def _engine(**kw):
+    model, params = _model()
+    return ServeEngine(model, params, ServeConfig(**kw))
+
+
+def _reused_engine(name, **kw):
+    """Engines are reusable after run(); share them across examples so the
+    jitted steps compile once per test session."""
+    if name not in _CACHE:
+        _CACHE[name] = _engine(**kw)
+    return _CACHE[name]
+
+
+# ----------------------------------------------------- policy unit behavior
+def _req(i, plen=2, max_new=4, **kw):
+    return Request(i, np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=max_new, **kw)
+
+
+def test_policy_registry_mirrors_core():
+    assert set(ADMISSION_POLICIES) == {"fcfs", "priority", "sjf",
+                                       "drf-fair"}
+    for name in ADMISSION_POLICIES:
+        assert get_admission_policy(name).name == name
+
+
+def test_priority_policy_orders_by_priority_then_fifo():
+    sched = Scheduler("priority", slots=1, max_len=32)
+    for i, pr in enumerate([0, 2, 2, 1]):
+        sched.submit(_req(i, priority=pr))
+    order = []
+    while sched.queue:
+        adm = sched.decide([None])
+        order.append(adm[0].req.req_id)
+    assert order == [1, 2, 3, 0]
+
+
+def test_sjf_policy_prefers_short_jobs():
+    sched = Scheduler("sjf", slots=1, max_len=32)
+    sched.submit(_req(0, plen=6, max_new=8))
+    sched.submit(_req(1, plen=1, max_new=2))
+    sched.submit(_req(2, plen=2, max_new=2))
+    order = []
+    while sched.queue:
+        order.append(sched.decide([None])[0].req.req_id)
+    assert order == [1, 2, 0]
+
+
+def test_drf_policy_alternates_tenants_and_credits_on_finish():
+    sched = Scheduler("drf-fair", slots=2, max_len=32)
+    for i in range(4):
+        sched.submit(_req(i, tenant="a"))
+    for i in range(4, 6):
+        sched.submit(_req(i, tenant="b"))
+    adm = sched.decide([None, None])
+    assert [a.req.tenant for a in adm] == ["a", "b"]
+    shares = sched.policy.shares()
+    assert shares["a"] == pytest.approx(shares["b"])
+    for a in adm:
+        sched.on_finish(a.req)
+    assert sched.policy.shares()["a"] == 0.0
+
+
+def test_serve_resource_dominant_share():
+    total = ServeResource(slots=4, kv=100)
+    assert ServeResource(2, 10).dominant_share(total) == 0.5
+    assert ServeResource(1, 80).dominant_share(total) == 0.8
+
+
+# ------------------------------------------------- two-tenant flood (engine)
+@pytest.mark.parametrize("policy", ["fcfs", "drf-fair"])
+def test_two_tenant_flood(policy):
+    """Tenant "heavy" floods the queue before "light" submits: fcfs
+    provably starves the light tenant (heavy holds every slot, light's
+    first completion waits for the backlog), drf-fair keeps heavy's slot
+    share bounded and completes light work almost immediately."""
+    slots, n_heavy, n_light = 4, 12, 4
+    eng = _engine(batch_slots=slots, max_len=32, policy=policy)
+    rng = np.random.default_rng(0)
+    for i in range(n_heavy):
+        eng.submit(Request(i, rng.integers(1, 64, size=2).astype(np.int32),
+                           max_new_tokens=3, tenant="heavy"))
+    for i in range(n_heavy, n_heavy + n_light):
+        eng.submit(Request(i, rng.integers(1, 64, size=2).astype(np.int32),
+                           max_new_tokens=3, tenant="light"))
+    max_heavy_share = 0.0
+    while eng.queue or any(r is not None for r in eng.active):
+        eng.step()
+        if any(r.tenant == "light" for r in eng.queue):
+            heavy = sum(1 for r in eng.active
+                        if r is not None and r.tenant == "heavy")
+            max_heavy_share = max(max_heavy_share, heavy / slots)
+    done = eng._finished
+    assert len(done) == n_heavy + n_light
+    light_first = next(i for i, r in enumerate(done)
+                       if r.tenant == "light")
+    if policy == "fcfs":
+        # starvation: every slot went to heavy while light queued, and
+        # light's first completion waited out most of the flood
+        assert max_heavy_share == 1.0
+        assert light_first >= n_heavy - slots
+    else:
+        # DRF bound: heavy never exceeds its fair share of the slots
+        # (+1 slot of slack for admission transients) while light queues
+        assert max_heavy_share <= 0.5 + 1.0 / slots
+        assert light_first <= 3
+        # accounting drained: all shares back to zero
+        assert all(v == 0.0 for v in eng.scheduler.policy.shares().values())
+
+
+# ----------------------------------------------------- sampling (pure fn)
+def test_sample_tokens_temp0_is_bitwise_argmax():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(5, 33)), jnp.float32)
+    out = sample_tokens(logits, jnp.arange(5, dtype=jnp.int32),
+                        jnp.zeros(5, jnp.float32),
+                        jnp.zeros(5, jnp.int32), jnp.ones(5, jnp.float32),
+                        jnp.zeros((5, 2), jnp.uint32))
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_matches_stop_reasons():
+    sp = SamplingParams(stop=(7, (1, 2, 3)))
+    assert matches_stop([5, 7], sp) == "stop"
+    assert matches_stop([1, 2, 3], sp) == "stop"
+    assert matches_stop([2, 3], sp) is None
+    assert matches_stop([4], sp, eos_id=4) == "eos"
+    assert matches_stop([], sp) is None
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), batch=st.integers(1, 4),
+           vocab=st.integers(4, 40))
+    def test_temp0_bitwise_argmax_hypothesis(seed, batch, vocab):
+        """Sampled decode with temperature=0 is bitwise the greedy argmax
+        whatever the top-k/top-p/keys riding along."""
+        rng = np.random.default_rng(seed)
+        logits = jnp.asarray(rng.normal(size=(batch, vocab)) * 4,
+                             jnp.float32)
+        out = sample_tokens(
+            logits, jnp.asarray(rng.integers(0, 31, batch), jnp.int32),
+            jnp.zeros(batch, jnp.float32),
+            jnp.asarray(rng.integers(0, vocab, batch), jnp.int32),
+            jnp.asarray(rng.uniform(0.1, 1.0, batch), jnp.float32),
+            jnp.asarray(rng.integers(0, 2**31, (batch, 2)), jnp.uint32))
+        assert np.array_equal(np.asarray(out),
+                              np.asarray(jnp.argmax(logits, -1)))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 6),
+           p=st.floats(0.05, 1.0))
+    def test_sampled_token_respects_topk_topp(seed, k, p):
+        rng = np.random.default_rng(seed)
+        b, v = 3, 24
+        logits = rng.normal(size=(b, v)).astype(np.float32) * 3
+        out = np.asarray(sample_tokens(
+            jnp.asarray(logits), jnp.asarray(rng.integers(0, 15, b),
+                                             jnp.int32),
+            jnp.full(b, 0.8, jnp.float32), jnp.full(b, k, jnp.int32),
+            jnp.full(b, p, jnp.float32),
+            jnp.asarray(rng.integers(0, 2**31, (b, 2)), jnp.uint32)))
+        for row, tok in zip(logits, out):
+            order = np.argsort(-row)
+            rank = int(np.where(order == tok)[0][0])
+            assert rank < k  # top-k membership
+            probs = np.exp(row[order] / 0.8 - np.max(row / 0.8))
+            probs /= probs.sum()
+            # exclusive-cumsum nucleus: mass strictly below tok < p
+            assert rank == 0 or float(np.cumsum(probs)[rank - 1]) < p
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.integers(1, 5))
+    def test_temp0_engine_bitwise_hypothesis(seed, n):
+        """Engine-level: random traces decode identically through the
+        wave-greedy, dense-sampled and paged-sampled paths at temp 0
+        (the engines are shared so the steps compile once)."""
+        trace = _trace(seed, n)
+        wave = _serve(_reused_engine("wave", batch_slots=2, max_len=32,
+                                     mode="wave"), trace)
+        dense = _serve(_reused_engine("dense", batch_slots=2, max_len=32),
+                       trace)
+        paged = _serve(_reused_engine("paged", batch_slots=2, max_len=32,
+                                      cache="paged", page_size=8), trace)
+        assert wave == dense == paged
+
+
+# ------------------------------------------ engine-level sampling semantics
+def _trace(seed, n, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 64, size=int(rng.integers(1, 7)))
+             .astype(np.int32), max_new) for _ in range(n)]
+
+
+def _serve(eng, trace, sampling=None):
+    for i, (prompt, max_new) in enumerate(trace):
+        eng.submit(Request(i, prompt.copy(), max_new_tokens=max_new,
+                           sampling=sampling or SamplingParams()))
+    return {r.req_id: r.output for r in eng.run()}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_temp0_engine_bitwise_matches_greedy_dense_and_paged(seed):
+    """The sampled decode step with temperature=0 reproduces the wave
+    engine's pure-greedy tokens bit for bit, on both cache layouts."""
+    trace = _trace(seed, 5)
+    wave = _serve(_reused_engine("wave", batch_slots=2, max_len=32,
+                                 mode="wave"), trace)
+    dense = _serve(_reused_engine("dense", batch_slots=2, max_len=32),
+                   trace)
+    paged = _serve(_reused_engine("paged", batch_slots=2, max_len=32,
+                                  cache="paged", page_size=8), trace)
+    assert wave == dense == paged
+
+
+def test_topk1_sampled_equals_greedy_end_to_end():
+    trace = _trace(3, 4)
+    greedy = _serve(_reused_engine("dense", batch_slots=2, max_len=32),
+                    trace)
+    forced = _serve(_reused_engine("dense", batch_slots=2, max_len=32),
+                    trace, SamplingParams(temperature=3.0, top_k=1))
+    assert greedy == forced
+
+
+def test_seeded_sampling_is_deterministic_and_slot_independent():
+    """Same (seed, prompt) reproduces tokens regardless of slot; a
+    different seed decodes a different trajectory."""
+    prompt = np.array([3, 5, 7], np.int32)
+    eng = _reused_engine("dense", batch_slots=2, max_len=32)
+    for i, seed in enumerate([11, 11, 12]):
+        eng.submit(Request(i, prompt.copy(), max_new_tokens=6,
+                           sampling=SamplingParams(temperature=1.5,
+                                                   seed=seed)))
+    outs = {r.req_id: r.output for r in eng.run()}
+    assert outs[0] == outs[1]
+    assert outs[0] != outs[2]
+    # paged engine draws the identical trajectory (fold keyed on position)
+    paged = _reused_engine("paged", batch_slots=2, max_len=32,
+                           cache="paged", page_size=8)
+    paged.submit(Request(0, prompt.copy(), max_new_tokens=6,
+                         sampling=SamplingParams(temperature=1.5, seed=11)))
+    assert eng is not paged
+    assert {r.req_id: r.output for r in paged.run()}[0] == outs[0]
+
+
+def test_wave_mode_rejects_sampled_requests():
+    eng = _reused_engine("wave", batch_slots=2, max_len=32, mode="wave")
+    with pytest.raises(ValueError):
+        eng.submit(_req(0, sampling=SamplingParams(temperature=1.0)))
+
+
+# --------------------------------------------- request handle + lifecycle
+def test_handle_lifecycle_and_streaming():
+    eng = _engine(batch_slots=1, max_len=32)
+    h0 = eng.submit(_req(0, max_new=4))
+    h1 = eng.submit(_req(1, max_new=4))
+    assert h0.state is RequestState.QUEUED
+    assert h1.state is RequestState.QUEUED
+    seen = []
+    for tok in h1.tokens():  # streams h1, driving h0 through first
+        seen.append(tok)
+        assert h1.state in (RequestState.PREFILL, RequestState.DECODE,
+                            RequestState.FINISHED)
+    assert h1.done and h1.finish_reason == "length"
+    assert seen == h1.output and len(seen) == 4
+    assert h0.done  # same engine drained it on the way
+    m = h1.metrics()
+    assert m["ttft_s"] >= 0 and m["tpot_s"] >= 0
+
+
+def test_stop_sequence_and_eos_reasons():
+    eng = _engine(batch_slots=1, max_len=32)
+    probe = eng.submit(_req(0, max_new=8)).result()
+    assert probe.finish_reason == "length"
+    stop = tuple(probe.output[1:3])
+    r = eng.submit(_req(1, max_new=8,
+                        sampling=SamplingParams(stop=(stop,)))).result()
+    assert r.finish_reason == "stop"
+    assert tuple(r.output[-len(stop):]) == stop
+    assert len(r.output) < len(probe.output)
+    r = eng.submit(Request(2, np.arange(1, 3, dtype=np.int32),
+                           max_new_tokens=8,
+                           eos_id=probe.output[0])).result()
+    assert r.finish_reason == "eos" and len(r.output) == 1
+
+
+def test_token_feed_path_reports_prefill_state():
+    """SSM/hybrid plans feed prompts token by token: the request is
+    observably PREFILL across ticks before its first output."""
+    cfg = dataclasses.replace(get_config("zamba2-2.7b", smoke=True),
+                              vocab_size=64)
+    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=1, max_len=32))
+    assert not eng.chunked
+    h = eng.submit(Request(0, np.arange(1, 5, dtype=np.int32),
+                           max_new_tokens=2))
+    eng.step()
+    assert h.state is RequestState.PREFILL
+    h.result()
+    assert h.state is RequestState.FINISHED
+
+
+# --------------------------------------------------------- run() stalls
+def test_run_raises_on_undrained_ticks():
+    eng = _engine(batch_slots=1, max_len=32)
+    eng.submit(_req(0, max_new=8))
+    eng.submit(_req(1, max_new=8))
+    with pytest.raises(ServeStalled, match="2 requests undrained"):
+        eng.run(max_ticks=1)
+    # the engine is still usable: draining finishes both requests
+    assert len(eng.run()) == 2
+
+
+def test_run_warn_mode_reports_partial():
+    eng = _engine(batch_slots=1, max_len=32, on_stall="warn")
+    eng.submit(_req(0, max_new=8))
+    eng.submit(_req(1, max_new=8))
+    with pytest.warns(RuntimeWarning, match="undrained"):
+        done = eng.run(max_ticks=1)
+    assert len(done) < 2
+    eng.run()  # drain so the shared cache state is clean
+
+
+# ------------------------------------------------- ServeConfig + shim
+def test_legacy_kwargs_shim_pr1_and_pr2_call_sites():
+    """PR 1/2-era keyword construction still works (DeprecationWarning)
+    and serves requests identically to ServeConfig construction."""
+    model, params = _model()
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        legacy = ServeEngine(model, params, batch_slots=2, max_len=32,
+                             mode="continuous", prefill_chunk=8)
+    assert legacy.config == ServeConfig(batch_slots=2, max_len=32,
+                                        prefill_chunk=8)
+    with pytest.warns(DeprecationWarning):
+        paged = ServeEngine(model, params, batch_slots=2, max_len=32,
+                            cache="paged", page_size=8, num_pages=17,
+                            page_policy="spread", prefix_cache=False)
+    assert paged.kv is not None and paged.kv.prefix is None
+    trace = _trace(7, 3)
+    assert _serve(legacy, trace) == _serve(
+        _reused_engine("dense", batch_slots=2, max_len=32), trace)
+
+
+def test_config_and_kwargs_are_exclusive_and_checked():
+    model, params = _model()
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(model, params, ServeConfig(), batch_slots=2)
+    with pytest.raises(TypeError, match="unknown"):
+        ServeEngine(model, params, bogus=3)
