@@ -1,0 +1,228 @@
+"""Benchmark regression gate: compare a fresh dry run against tracked
+baselines.
+
+    PYTHONPATH=src python scripts/check_bench.py [names...]
+        [--tolerance 0.25] [--latency-tolerance 1.0]
+        [--no-run] [--update]
+
+For each benchmark name (default: ``serve_throughput`` and
+``paged_serve``) this (1) runs ``benchmarks/<name>.py --dry`` — which
+writes ``BENCH_<name>_dry.json`` at the repo root — unless ``--no-run``,
+then (2) compares the fresh JSON against the tracked baseline
+``benchmarks/baselines/BENCH_<name>_dry.json``:
+
+* **rate metrics** (``tok_per_s``, ``continuous_speedup``) must not fall
+  more than ``--tolerance`` (default ±25%) below baseline — faster
+  always passes;
+* **latency metrics** (p99 TTFT / p99 TPOT) must not rise more than
+  ``--latency-tolerance`` above baseline (default ±100%: wall-clock
+  percentiles on shared CI runners are far noisier than throughput);
+* **DRF share bounds** are structural, machine-independent, and checked
+  absolutely: the flooding tenant's share stays at its entitlement
+  (unweighted: ≤ 0.75 over 4 slots; weighted SLO flood: 0.75 ± 0.1),
+  preemption fired, and the checkpoint/resume replay was bitwise
+  identical.
+
+Dry traces are single wall-clock samples, so the gate is best-of-N: a
+benchmark passes if ANY of ``--retries`` fresh runs clears every bound
+(a genuine regression fails all of them; one-off scheduler noise does
+not).  Exit status is nonzero on any regression.  To re-baseline after
+an intentional perf change, run with ``--update`` (copies the fresh dry
+JSONs over the baselines) and commit the result — see docs/ci.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
+DEFAULT_NAMES = ("serve_throughput", "paged_serve")
+
+# (json path into the payload, kind): kind "rate" = higher is better,
+# "latency" = lower is better, gated by the respective tolerance
+METRICS = {
+    # NOTE: the flood/SLO tail latencies are deliberately NOT gated
+    # cross-run here — their claims (drf light tenant faster than fcfs,
+    # preemption beating the no-preempt baseline) are asserted
+    # *relatively within one process* by the benchmark itself, which is
+    # robust; their absolute ~15 ms values are pure scheduler jitter.
+    "serve_throughput": [
+        (("continuous", "tok_per_s"), "rate"),
+        (("continuous_speedup",), "rate"),
+        (("continuous", "p99_ttft_s"), "latency"),
+        (("continuous", "p99_tpot_s"), "latency"),
+    ],
+    "paged_serve": [
+        (("paged", "tok_per_s"), "rate"),
+        (("paged", "p99_ttft_s"), "latency"),
+    ],
+}
+
+# (json path, predicate, description): machine-independent share/shape
+# bounds — these never need re-baselining
+BOUNDS = {
+    "serve_throughput": [
+        (("flood", "drf-fair", "max_heavy_slot_share"),
+         lambda v: v <= 0.75 + 1e-9,
+         "unweighted DRF flood share bounded by fair share"),
+        (("slo_flood", "weighted-preempt",
+          "max_gold_share_while_free_waits"),
+         lambda v: abs(v - 0.75) <= 0.1,
+         "weighted SLO flood: gold at its 3:1 entitlement (0.75 +- 0.1)"),
+        (("slo_flood", "weighted-preempt", "preemptions"),
+         lambda v: v >= 1, "preemption fired under the SLO flood"),
+        (("slo_flood", "weighted-preempt", "replay_bitwise_identical"),
+         lambda v: bool(v), "preempted request replayed bitwise-identical"),
+    ],
+    "paged_serve": [],
+}
+
+
+def dig(payload: dict, path: tuple):
+    for key in path:
+        payload = payload[key]
+    return payload
+
+
+def run_dry(name: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", f"{name}.py"),
+         "--dry"], check=True, cwd=ROOT, env=env)
+
+
+def check(name: str, tol: float, lat_tol: float,
+          structural_only: bool = False) -> list[str]:
+    fresh_path = os.path.join(ROOT, f"BENCH_{name}_dry.json")
+    base_path = os.path.join(BASELINE_DIR, f"BENCH_{name}_dry.json")
+    if not structural_only and not os.path.exists(base_path):
+        return [f"{name}: no baseline at {os.path.relpath(base_path, ROOT)}"
+                f" — run scripts/check_bench.py --update and commit it"]
+    if not os.path.exists(fresh_path):
+        return [f"{name}: no fresh run at "
+                f"{os.path.relpath(fresh_path, ROOT)} — drop --no-run or "
+                f"run benchmarks/{name}.py --dry first"]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    base = {}
+    if not structural_only:
+        with open(base_path) as f:
+            base = json.load(f)
+    failures = []
+    for path, kind in ([] if structural_only else METRICS[name]):
+        label = f"{name}:{'.'.join(path)}"
+        try:
+            fv, bv = float(dig(fresh, path)), float(dig(base, path))
+        except KeyError:
+            failures.append(f"{label}: missing (baseline stale? re-run "
+                            f"--update)")
+            continue
+        if kind == "rate":
+            floor = bv * (1 - tol)
+            ok = fv >= floor
+            verdict = f"{fv:.4g} vs baseline {bv:.4g} (floor {floor:.4g})"
+        else:
+            ceil = bv * (1 + lat_tol)
+            ok = fv <= ceil
+            verdict = f"{fv:.4g} vs baseline {bv:.4g} (ceil {ceil:.4g})"
+        print(f"  {'ok  ' if ok else 'FAIL'} {label}: {verdict}")
+        if not ok:
+            failures.append(f"{label}: {verdict}")
+    for path, pred, desc in BOUNDS[name]:
+        label = f"{name}:{'.'.join(path)}"
+        try:
+            v = dig(fresh, path)
+        except KeyError:
+            failures.append(f"{label}: missing ({desc})")
+            continue
+        ok = pred(v)
+        print(f"  {'ok  ' if ok else 'FAIL'} {label} = {v!r} ({desc})")
+        if not ok:
+            failures.append(f"{label} = {v!r} violates: {desc}")
+    return failures
+
+
+def update(names) -> None:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for name in names:
+        src = os.path.join(ROOT, f"BENCH_{name}_dry.json")
+        dst = os.path.join(BASELINE_DIR, f"BENCH_{name}_dry.json")
+        shutil.copyfile(src, dst)
+        print(f"re-baselined {os.path.relpath(dst, ROOT)}")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("names", nargs="*",
+                    help=f"benchmarks to gate (default: all of "
+                         f"{', '.join(DEFAULT_NAMES)})")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative drop in rate metrics "
+                         "(default 0.25 = -25%%)")
+    ap.add_argument("--latency-tolerance", type=float, default=1.0,
+                    help="allowed relative rise in p99 latency metrics "
+                         "(default 1.0 = +100%%; wall-clock percentiles "
+                         "are noisy on shared runners)")
+    ap.add_argument("--structural-only", action="store_true",
+                    help="gate only the machine-independent bounds (DRF "
+                         "shares, preemption, bitwise replay) — for CI "
+                         "runners whose hardware does not match the "
+                         "recorded baselines")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="best-of-N gating: pass if any of N fresh runs "
+                         "clears every bound (default 2)")
+    ap.add_argument("--no-run", action="store_true",
+                    help="compare existing BENCH_*_dry.json without "
+                         "re-running the benchmarks (implies 1 attempt)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh dry JSONs over the tracked "
+                         "baselines (re-baseline) instead of gating")
+    args = ap.parse_args()
+    names = args.names or list(DEFAULT_NAMES)
+    unknown = set(names) - set(METRICS)
+    if unknown:
+        ap.error(f"unknown benchmark(s) {sorted(unknown)}; "
+                 f"known: {sorted(METRICS)}")
+
+    if args.update:
+        for name in names:
+            print(f"== fresh dry run: {name} ==")
+            run_dry(name)
+        update(names)
+        return
+    failures = []
+    attempts = 1 if args.no_run else max(1, args.retries)
+    for name in names:
+        for attempt in range(attempts):
+            if not args.no_run:
+                print(f"== fresh dry run: {name} "
+                      f"(attempt {attempt + 1}/{attempts}) ==")
+                run_dry(name)
+            print(f"== gate: {name} ==")
+            fails = check(name, args.tolerance, args.latency_tolerance,
+                          structural_only=args.structural_only)
+            if not fails:
+                break
+            if attempt + 1 < attempts:
+                print(f"  retrying {name}: {len(fails)} metric(s) out of "
+                      f"bounds (could be scheduler noise)")
+        failures += fails
+    if failures:
+        print(f"\nBENCH GATE FAILED ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nbench gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,35 +1,83 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests, per-arch smoke (fails loudly on any arch
-# error), then the serving benchmark in fast dry mode.  Run from repo root:
+# Tiered CI entry point — the local mirror of .github/workflows/ci.yml.
+# Run from anywhere:
 #
-#   bash scripts/ci.sh
+#   bash scripts/ci.sh [lint|tier1|smoke|bench|all]
+#
+#   lint   ruff check (skipped with a warning if ruff is not installed)
+#   tier1  fast pytest lane:  -m "not slow"  (the per-push CI lane)
+#   smoke  per-arch smoke_all + serving launcher smokes (paged, every
+#          admission policy, preemption + weighted SLO tiers)
+#   bench  dry benchmarks + the regression gate (scripts/check_bench.py)
+#   all    full pytest (the pre-merge lane) + smoke + bench  [default]
+#
+# Re-baselining the bench gate after an intentional perf change:
+#   python scripts/check_bench.py --update   # then commit the baselines
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== tier-1 pytest =="
-python -m pytest -x -q
+tier="${1:-all}"
 
-echo "== smoke_all (every arch: fwd/loss/prefill/decode) =="
-python scripts/smoke_all.py
+lint() {
+    echo "== lint (ruff) =="
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check src tests benchmarks scripts
+    else
+        echo "ruff not installed — skipping lint (CI runs it)"
+    fi
+}
 
-echo "== serve throughput (dry) =="
-python benchmarks/serve_throughput.py --dry
+tier1() {
+    echo "== tier-1 pytest (-m 'not slow') =="
+    python -m pytest -x -q -m "not slow"
+}
 
-echo "== paged serve (dry): paged+prefix-cache vs dense =="
-python benchmarks/paged_serve.py --dry
+full_tests() {
+    echo "== full pytest (pre-merge lane) =="
+    python -m pytest -x -q
+}
 
-echo "== paged serve smoke (launcher) =="
-python -m repro.launch.serve --arch internlm2-1.8b --smoke --requests 6 \
-    --slots 2 --max-len 64 --max-new 6 --cache paged --page-size 8
+smoke() {
+    echo "== smoke_all (every arch: fwd/loss/prefill/decode) =="
+    python scripts/smoke_all.py
 
-echo "== admission policy smokes (launcher, sampled, 2 tenants) =="
-for policy in fcfs priority sjf drf-fair; do
+    echo "== paged serve smoke (launcher) =="
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke --requests 6 \
+        --slots 2 --max-len 64 --max-new 6 --cache paged --page-size 8
+
+    echo "== admission policy smokes (launcher, sampled, 2 tenants) =="
+    for policy in fcfs priority sjf drf-fair; do
+        python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+            --requests 6 --slots 2 --max-len 64 --max-new 6 \
+            --policy "$policy" --tenants 2 --temperature 0.7 --top-k 8
+    done
+
+    echo "== preemption + weighted SLO smoke (launcher) =="
     python -m repro.launch.serve --arch internlm2-1.8b --smoke \
-        --requests 6 --slots 2 --max-len 64 --max-new 6 \
-        --policy "$policy" --tenants 2 --temperature 0.7 --top-k 8
-done
+        --requests 8 --slots 2 --max-len 64 --max-new 6 \
+        --policy drf-fair --tenants 2 \
+        --tenant-weights "tenant-0=3,tenant-1=1" --preempt \
+        --victim-policy lowest-weight-share-first
+}
 
-echo "CI OK"
+bench() {
+    echo "== dry benchmarks + regression gate =="
+    # headroom over the strict defaults: local dev boxes and shared
+    # containers carry neighbor load a dedicated runner would not (the
+    # structural DRF/preemption/replay bounds are exact regardless)
+    python scripts/check_bench.py --tolerance 0.4 --retries 3
+}
+
+case "$tier" in
+    lint)  lint ;;
+    tier1) tier1 ;;
+    smoke) smoke ;;
+    bench) bench ;;
+    all)   lint; full_tests; smoke; bench ;;
+    *) echo "usage: $0 [lint|tier1|smoke|bench|all]" >&2; exit 2 ;;
+esac
+
+echo "CI OK ($tier)"

@@ -17,6 +17,11 @@ params (temperature 0 = greedy).
 (``--page-size``, ``--num-pages``, ``--page-policy pack|spread``,
 ``--no-prefix-cache``); admission then reserves only the pages a request
 can touch and queues with backpressure when the pool is exhausted.
+
+``--preempt`` enables Mesos-style slot revocation (checkpoint/restore;
+``--victim-policy youngest-first|lowest-weight-share-first``), and
+``--tenant-weights "tenant-0=3,tenant-1=1"`` maps SLO tiers onto
+weighted-DRF shares.
 """
 from __future__ import annotations
 
@@ -29,9 +34,31 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import LM, RuntimeKnobs
-from repro.runtime.scheduler import ADMISSION_POLICIES
+from repro.runtime.scheduler import ADMISSION_POLICIES, VICTIM_POLICIES
 from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
                                  ServeEngine)
+
+
+def parse_tenant_weights(spec: str) -> dict:
+    """``"gold=3,free=1"`` -> ``{"gold": 3.0, "free": 1.0}``.  Raises
+    ``ValueError`` (an argparse usage error) on malformed entries or
+    non-positive weights, so bad configs fail at the CLI instead of as
+    an assertion deep inside scheduling."""
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, eq, w = part.partition("=")
+        name = name.strip()
+        if not eq or not name:
+            raise ValueError(f"expected TENANT=WEIGHT, got {part!r}")
+        weight = float(w)  # ValueError on junk -> argparse usage error
+        if weight <= 0:
+            raise ValueError(f"weight for {name!r} must be > 0, "
+                             f"got {weight}")
+        out[name] = weight
+    return out
 
 
 def main():
@@ -49,6 +76,14 @@ def main():
                     default="fcfs", help="admission policy")
     ap.add_argument("--tenants", type=int, default=1,
                     help="spread requests over N tenants (round-robin)")
+    ap.add_argument("--tenant-weights", type=parse_tenant_weights,
+                    default=None, metavar="T=W,...",
+                    help="weighted-DRF SLO tiers, e.g. 'tenant-0=3,"
+                         "tenant-1=1' (unlisted tenants weigh 1)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="enable slot preemption (checkpoint/restore)")
+    ap.add_argument("--victim-policy", choices=sorted(VICTIM_POLICIES),
+                    default="youngest-first")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -72,7 +107,9 @@ def main():
         prefill_chunk=args.prefill_chunk, cache=args.cache,
         page_size=args.page_size, num_pages=args.num_pages,
         page_policy=args.page_policy,
-        prefix_cache=not args.no_prefix_cache, policy=args.policy))
+        prefix_cache=not args.no_prefix_cache, policy=args.policy,
+        tenant_weights=args.tenant_weights, preempt=args.preempt,
+        victim_policy=args.victim_policy))
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed)
@@ -94,6 +131,10 @@ def main():
     print(f"arch={args.arch} mode={args.mode} cache={args.cache} "
           f"policy={args.policy} served {len(done)} requests, {toks} "
           f"tokens in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+    if args.preempt:
+        print(f"preemptions: {engine.scheduler.preempted_total} "
+              f"(requests preempted >=1x: "
+              f"{sum(1 for r in done if r.preempt_count)})")
     if ttft:
         print(f"ttft p50 {np.percentile(ttft, 50) * 1e3:.0f}ms / "
               f"p99 {np.percentile(ttft, 99) * 1e3:.0f}ms "

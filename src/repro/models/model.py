@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from .layers import chunked_ce_loss, embed, embedding_init, rmsnorm, rmsnorm_init, unembed
 from .transformer import (apply_blocks, apply_blocks_decode,
-                          apply_blocks_prefill_chunk, copy_cache_pages,
+                          apply_blocks_prefill_chunk, cache_batch_axes,
+                          copy_cache_in, copy_cache_out, copy_cache_pages,
                           init_blocks, init_cache, init_cache_paged,
                           supports_chunked_prefill, supports_paged_cache)
 
@@ -183,6 +184,21 @@ class LM:
         """Device half of CoW: duplicate physical page src -> dst in every
         layer pool."""
         return copy_cache_pages(caches, src, dst)
+
+    # ------------------------------------------------- checkpoint/restore
+    def cache_batch_axes(self, max_len: int):
+        """Per-leaf batch-axis tree of the dense cache (host-side)."""
+        return cache_batch_axes(self.cfg, self.knobs, max_len)
+
+    def copy_cache_out(self, caches, slot, axes):
+        """Slice slot ``slot``'s stripe from every dense cache leaf — the
+        device half of a preemption checkpoint (KV and, for SSM/hybrid
+        plans, recurrent state alike)."""
+        return copy_cache_out(caches, slot, axes)
+
+    def copy_cache_in(self, caches, snapshot, slot, axes):
+        """Restore a ``copy_cache_out`` snapshot into slot ``slot``."""
+        return copy_cache_in(caches, snapshot, slot, axes)
 
     # -------------------------------------------------------------- cache
     def init_cache(self, batch: int, max_len: int):

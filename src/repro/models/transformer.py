@@ -528,6 +528,40 @@ def init_cache_paged(cfg, knobs, num_pages: int, page_size: int):
     return caches
 
 
+def cache_batch_axes(cfg, knobs, max_len: int):
+    """Per-leaf batch-axis index of the dense cache tree, found by
+    diffing abstract cache shapes for two batch sizes (leaf layouts vary:
+    stacked layer axes lead, SSM leaves differ from KV).  Pure host
+    bookkeeping — drives ``copy_cache_out/in`` and the engine's slot
+    reset without hardcoding any layout."""
+    s1 = jax.eval_shape(lambda: init_cache(cfg, knobs, 1, max_len))
+    s2 = jax.eval_shape(lambda: init_cache(cfg, knobs, 2, max_len))
+    return jax.tree.map(
+        lambda a, b: next(i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                          if x != y), s1, s2)
+
+
+def copy_cache_out(caches, slot, axes):
+    """Slice one slot's stripe out of every dense cache leaf (keeping a
+    size-1 batch dim) — the device half of a preemption checkpoint; the
+    engine ``device_get``s the result to a host-side buffer.  ``axes`` is
+    the ``cache_batch_axes`` tree."""
+    return jax.tree.map(
+        lambda c, ax: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=ax),
+        caches, axes)
+
+
+def copy_cache_in(caches, snapshot, slot, axes):
+    """Write a ``copy_cache_out`` snapshot back into slot ``slot`` of
+    every leaf — restore half of checkpoint/resume.  The full stripe is
+    rewritten, so the slot's previous occupant leaves no residue and
+    SSM/recurrent leaves restore exactly."""
+    return jax.tree.map(
+        lambda c, s, ax: jax.lax.dynamic_update_slice_in_dim(c, s, slot,
+                                                             axis=ax),
+        caches, snapshot, axes)
+
+
 def copy_cache_pages(caches, src, dst):
     """Copy physical page ``src`` -> ``dst`` in every layer pool (the
     device half of copy-on-write).  The page axis of every paged leaf sits

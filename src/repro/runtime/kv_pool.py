@@ -219,6 +219,32 @@ class PrefixCache:
     def __len__(self):
         return len(self._map)
 
+    def probe(self, prompt: np.ndarray) -> list[int]:
+        """Read-only longest-cached-prefix pages — no increfs, no LRU
+        moves, no hit/miss accounting.  ``KVCacheManager``'s sizing
+        queries (``fits_now`` et al.) use this so a scheduler merely
+        *considering* an admission never perturbs cache state."""
+        ps = self.pool.page_size
+        parent = ""
+        pages: list[int] = []
+        for i in range(len(prompt) // ps):
+            key = _chunk_key(parent, prompt[i * ps:(i + 1) * ps])
+            page = self._map.get(key)
+            if page is None:
+                break
+            parent = key
+            pages.append(page)
+        return pages
+
+    def evictable(self, exclude=()) -> int:
+        """Pages ``evict`` could free right now (cache-only, ref 1).
+        ``exclude`` lists pages the prospective admission would itself
+        use: its ``lookup`` increfs them *before* ``evict`` runs, so
+        they must not be counted as reclaimable headroom."""
+        skip = set(exclude)
+        return sum(1 for pg in self._map.values()
+                   if self.pool.ref[pg] == 1 and pg not in skip)
+
     def lookup(self, prompt: np.ndarray) -> tuple[list[int], int]:
         """Longest cached prefix of ``prompt`` in whole pages.
 
@@ -311,6 +337,38 @@ class KVCacheManager:
         need = min(prompt_len + max_new, self.max_len)
         return -(-need // self.page_size)
 
+    def _sizing(self, prompt: np.ndarray, max_new: int):
+        """(fresh pages an ``admit`` would allocate, its cached-prefix
+        pages) — the sizing half of ``admit`` with zero side effects."""
+        prompt = np.asarray(prompt, np.int32)
+        p = len(prompt)
+        n_blocks = self.blocks_needed(p, max_new)
+        cached = [] if self.prefix is None else self.prefix.probe(prompt)
+        matched = len(cached) * self.page_size
+        start = (min(matched, p - 1) // self.chunk) * self.chunk
+        cow = max(0, len(cached) - start // self.page_size)
+        return n_blocks - len(cached) + cow, cached
+
+    def pages_needed_now(self, prompt: np.ndarray, max_new: int) -> int:
+        """Fresh pages an ``admit`` of this request would allocate RIGHT
+        NOW (prefix sharing and CoW headroom included), side-effect
+        free — the testable spec of ``admit``'s pool consumption
+        (tests/test_preemption.py holds them equal)."""
+        return self._sizing(prompt, max_new)[0]
+
+    def fits_now(self, prompt: np.ndarray, max_new: int) -> bool:
+        """Could ``admit`` succeed right now?  The scheduler's
+        preemption phase gates swaps on this (an accurate estimate —
+        over-estimating demand would suppress justified evictions).
+        Evictable prefix-cache pages count as available (``admit``
+        evicts them itself) — except the request's own cached prefix,
+        which its lookup increfs before eviction runs."""
+        need, cached = self._sizing(prompt, max_new)
+        avail = self.pool.available
+        if self.prefix is not None:
+            avail += self.prefix.evictable(exclude=cached)
+        return need <= avail
+
     def fits_ever(self, prompt_len: int, max_new: int) -> bool:
         """Could this request EVER be admitted (empty pool)?"""
         n = self.blocks_needed(prompt_len, max_new)
@@ -383,6 +441,27 @@ class KVCacheManager:
             self.pool.decref(pg)
         self._held[slot] = []
         self.page_table[slot, :] = 0
+
+    # --------------------------------------------------------- preemption
+    def detach_slot(self, slot: int) -> list[int]:
+        """Preemption: transfer the slot's page chain to the caller's
+        checkpoint and unmap the row.  Zero-copy — refcounts are
+        unchanged (the checkpoint now owns the slot's hold, so the pages
+        can be neither reallocated nor prefix-evicted), and the K/V bytes
+        never move.  ``attach_slot`` is the inverse at resume."""
+        pages = self._held[slot]
+        self._held[slot] = []
+        self.page_table[slot, :] = 0
+        return pages
+
+    def attach_slot(self, slot: int, pages: list[int]):
+        """Resume a detached page chain into ``slot`` (any free slot —
+        page indirection makes the chain slot-independent)."""
+        assert not self._held[slot], f"slot {slot} already holds pages"
+        assert len(pages) <= self.max_pages, (len(pages), self.max_pages)
+        self._held[slot] = list(pages)
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :len(pages)] = pages
 
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:

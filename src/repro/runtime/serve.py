@@ -41,6 +41,24 @@ tick never pays the sampling math.  Prompts are consumed by
 **chunked prefill** where the architecture allows it; SSM/hybrid plans
 fall back to per-slot token feeding with slot state zeroed on admission.
 
+Preemption & SLO tiers (``ServeConfig.preempt``, ``tenant_weights``)
+--------------------------------------------------------------------
+Admission alone cannot undo a grab, so ``preempt=True`` makes the decide
+phase two-phase (Mesos-style revocation): when a queued tenant's weighted
+DRF share would stay strictly below a running tenant's, the scheduler
+evicts a victim (``victim_policy``: ``youngest-first`` /
+``lowest-weight-share-first``) and the executor checkpoints its slot —
+decode position, last token, and KV state.  Paged checkpoints are
+zero-copy (the page chain detaches from the slot, refcounts intact);
+dense checkpoints snapshot the slot's cache stripe to a host buffer via
+the models' ``copy_cache_out``/``copy_cache_in`` pair.  The request
+re-enters the queue as ``PREEMPTED`` and later resumes into *any* free
+slot at ``pos = checkpoint`` without re-running prefill, producing the
+bitwise-identical token stream (sampling keys fold the absolute
+position, never the slot).  ``tenant_weights`` maps SLO tiers onto DRF
+shares — ``{"gold": 3, "free": 1}`` converges to a 3:1 slot split under
+contention.
+
 ``mode="wave"`` keeps the legacy lockstep engine — admit a fresh wave only
 when every slot is free, all slots decode greedily at one scalar position
 — as the baseline ``benchmarks/serve_throughput.py`` measures continuous
@@ -79,13 +97,12 @@ import numpy as np
 from repro.runtime.kv_pool import KVCacheManager
 from repro.runtime.sampling import SamplingParams, matches_stop
 from repro.runtime.scheduler import Scheduler
-from repro.runtime.steps import (make_paged_prefill_chunk_step,
-                                 make_paged_serve_step,
-                                 make_prefill_chunk_step, make_serve_step,
+from repro.runtime.steps import (compiled_fn, compiled_step,
                                  pick_decode_splits)
 
-__all__ = ["Request", "RequestHandle", "RequestState", "SamplingParams",
-           "ServeConfig", "ServeEngine", "ServeStalled", "request_metrics"]
+__all__ = ["Checkpoint", "Request", "RequestHandle", "RequestState",
+           "SamplingParams", "ServeConfig", "ServeEngine", "ServeStalled",
+           "request_metrics"]
 
 
 def request_metrics(req: "Request") -> dict:
@@ -104,6 +121,26 @@ def request_metrics(req: "Request") -> dict:
     return out
 
 
+def _ckpt_fns(model, max_len: int):
+    """(copy_out, copy_in) jitted pair for dense checkpoint/restore,
+    memoized in ``runtime.steps``' shared compiled-callable LRU (keyed
+    on (kind, cfg, knobs, max_len)) so replay/extra engines over the
+    same model don't recompile."""
+    def build_out():
+        axes = model.cache_batch_axes(max_len)
+        return lambda caches, slot: model.copy_cache_out(caches, slot,
+                                                         axes)
+
+    def build_in():
+        axes = model.cache_batch_axes(max_len)
+        return lambda caches, snap, slot: model.copy_cache_in(
+            caches, snap, slot, axes)
+
+    base = (model.cfg, model.knobs, max_len)
+    return (compiled_fn(("copy_out",) + base, build_out),
+            compiled_fn(("copy_in",) + base, build_in, donate=(0,)))
+
+
 class ServeStalled(RuntimeError):
     """``run()`` exhausted its tick budget with requests undrained, or a
     streaming handle stopped making progress."""
@@ -113,7 +150,20 @@ class RequestState(enum.Enum):
     QUEUED = "queued"      # submitted, waiting for the scheduler
     PREFILL = "prefill"    # consuming the prompt (chunked or token feed)
     DECODE = "decode"      # generating
+    PREEMPTED = "preempted"  # checkpointed + requeued; resumes at pos
     FINISHED = "finished"  # done; see Request.finish_reason
+
+
+@dataclass
+class Checkpoint:
+    """A preempted request's resume point.  ``pages`` (paged cache) is
+    the detached page chain — the K/V never left HBM; ``kv`` (dense) is
+    the host-side snapshot of the slot's cache stripe."""
+
+    pos: int  # decode position to resume at
+    last_token: int  # the token to feed at ``pos``
+    pages: Optional[list] = None
+    kv: object = None
 
 
 @dataclass
@@ -129,6 +179,7 @@ class Request:
     done: bool = False
     state: RequestState = RequestState.QUEUED
     finish_reason: Optional[str] = None  # "eos" | "stop" | "length"
+    preempt_count: int = 0  # times this request was checkpointed
     # wall-clock lifecycle stamps (time.perf_counter seconds)
     t_submit: Optional[float] = None
     t_first: Optional[float] = None
@@ -199,7 +250,13 @@ class ServeConfig:
     ``runtime.scheduler.ADMISSION_POLICIES``; ``on_stall`` decides whether
     ``run()`` raises (``"raise"``, default) or warns and returns partial
     results (``"warn"``) when its tick budget is exhausted with requests
-    undrained."""
+    undrained.
+
+    ``tenant_weights`` maps tenant names onto weighted-DRF shares (SLO
+    tiers; unlisted tenants weigh 1).  ``preempt=True`` lets the decide
+    phase reclaim running slots when a swap strictly improves weighted
+    fairness; ``victim_policy`` (``runtime.scheduler.VICTIM_POLICIES``)
+    picks who gets checkpointed."""
 
     batch_slots: int = 4
     max_len: int = 128
@@ -212,6 +269,9 @@ class ServeConfig:
     prefix_cache: bool = True
     policy: str = "fcfs"
     on_stall: str = "raise"
+    tenant_weights: Optional[dict] = None
+    preempt: bool = False
+    victim_policy: str = "youngest-first"
 
 
 _CONFIG_FIELDS = {f.name for f in dataclasses.fields(ServeConfig)}
@@ -240,6 +300,9 @@ class ServeEngine:
         assert config.mode in ("continuous", "wave"), config.mode
         assert config.cache in ("dense", "paged"), config.cache
         assert config.on_stall in ("raise", "warn"), config.on_stall
+        if config.preempt and config.mode != "continuous":
+            raise ValueError("preempt=True requires mode='continuous' "
+                             "(wave slots drain in lockstep)")
         self.config = config
         self.model = model
         self.params = params
@@ -260,7 +323,11 @@ class ServeEngine:
         self.samp_keys = np.zeros((batch_slots, 2), np.uint32)
         self._finished: list[Request] = []
         self._admit_emitted = 0  # tokens emitted by chunked prefill
-        self._decode_one = jax.jit(model.decode_step, donate_argnums=(1,))
+        # jitted steps come from runtime.steps' module-level LRU: engines
+        # over equal (cfg, knobs) share one compiled callable per step
+        self._decode_one = compiled_step(model, "decode_one")
+        # checkpoint/restore (dense): built on first preemption
+        self._copy_out = self._copy_in = None
         self.kv: Optional[KVCacheManager] = None
         if config.cache == "paged":
             if config.mode != "continuous":
@@ -295,24 +362,20 @@ class ServeEngine:
             # greedy and sampled variants both exist (jit is lazy — only
             # the ones a trace actually hits compile); a tick pays the
             # sampling math only when a live slot has temperature > 0
-            self._step = jax.jit(
-                make_paged_serve_step(model, page_size),
-                donate_argnums=(1,))
-            self._step_sampled = jax.jit(
-                make_paged_serve_step(model, page_size, sampled=True),
-                donate_argnums=(1,))
-            self._prefill = jax.jit(
-                make_paged_prefill_chunk_step(model, page_size),
-                donate_argnums=(1,))
-            self._prefill_sampled = jax.jit(
-                make_paged_prefill_chunk_step(model, page_size,
-                                              sampled=True),
-                donate_argnums=(1,))
+            self._step = compiled_step(model, "paged_serve",
+                                       page_size=page_size)
+            self._step_sampled = compiled_step(model, "paged_serve",
+                                               page_size=page_size,
+                                               sampled=True)
+            self._prefill = compiled_step(model, "paged_prefill_chunk",
+                                          page_size=page_size)
+            self._prefill_sampled = compiled_step(
+                model, "paged_prefill_chunk", page_size=page_size,
+                sampled=True)
         else:
             self.caches = model.init_cache(batch_slots, max_len)
-            self._step = jax.jit(make_serve_step(model), donate_argnums=(1,))
-            self._step_sampled = jax.jit(make_serve_step(model, sampled=True),
-                                         donate_argnums=(1,))
+            self._step = compiled_step(model, "serve")
+            self._step_sampled = compiled_step(model, "serve", sampled=True)
             # chunked prefill: one compiled (1, C) step reused for every
             # slot and offset; C rounded down to a divisor of max_len so
             # padded chunk writes never clamp out of bounds.
@@ -324,26 +387,25 @@ class ServeEngine:
                 c -= 1
             self.prefill_chunk = c
             if self.chunked:
-                self._prefill = jax.jit(
-                    make_prefill_chunk_step(model),
-                    donate_argnums=(1,))
-                self._prefill_sampled = jax.jit(
-                    make_prefill_chunk_step(model, sampled=True),
-                    donate_argnums=(1,))
+                self._prefill = compiled_step(model, "prefill_chunk")
+                self._prefill_sampled = compiled_step(model, "prefill_chunk",
+                                                      sampled=True)
         if cache_shardings is not None:
             self.caches = jax.device_put(self.caches, cache_shardings)
         # decide/execute split: the scheduler owns the queue, the policy,
-        # and (drf-fair) the per-tenant accounting — host state only
+        # the per-tenant (weighted) DRF accounting, and the preemption
+        # victim policy — host state only
         self.scheduler = Scheduler(config.policy, slots=batch_slots,
-                                   max_len=max_len, kv=self.kv)
+                                   max_len=max_len, kv=self.kv,
+                                   weights=config.tenant_weights,
+                                   preempt=config.preempt,
+                                   victim=config.victim_policy)
         # split-K autotune (dense Pallas decode only): pick the fan-out
         # per tick from (max(pos), live slots); each compiles once.
         self._autotune = (config.cache == "dense"
                           and config.mode == "continuous"
                           and model.knobs.use_pallas
                           and model.knobs.decode_splits == 0)
-        self._step_by_splits = {(1, False): self._step,
-                                (1, True): self._step_sampled}
         # SSM/hybrid state is not position-masked: zero a slot on admission
         self._needs_reset = model.cfg.family in ("ssm", "hybrid")
         if self._needs_reset:
@@ -356,15 +418,9 @@ class ServeEngine:
 
     @staticmethod
     def _make_slot_reset(model, max_len):
-        """Zero one slot's cache state.  The batch axis of each cache leaf
-        is found by diffing abstract cache shapes for two batch sizes (leaf
-        layouts vary: stacked layer axes lead, SSM leaves differ from KV)."""
-        s1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
-        s2 = jax.eval_shape(lambda: model.init_cache(2, max_len))
-        axes = jax.tree.map(
-            lambda a, b: next(i for i, (x, y) in enumerate(zip(a.shape,
-                                                               b.shape))
-                              if x != y), s1, s2)
+        """Zero one slot's cache state (batch axes per leaf from
+        ``model.cache_batch_axes`` — layouts vary across plans)."""
+        axes = model.cache_batch_axes(max_len)
 
         def reset(caches, slot):
             def zero(c, ax):
@@ -404,12 +460,9 @@ class ServeEngine:
             req.t_first = time.perf_counter()
         req.output.append(tok)
 
-    def _finish(self, s: int, reason: str):
-        req = self.active[s]
-        req.done = True
-        req.state = RequestState.FINISHED
-        req.finish_reason = reason
-        req.t_finish = time.perf_counter()
+    def _clear_slot(self, s: int):
+        """Park slot ``s``: no occupant, pos -1, sampling state neutral
+        (finish and preemption both come through here)."""
         self.active[s] = None
         self.pos[s] = -1
         self.tokens[s, 0] = 0
@@ -417,22 +470,85 @@ class ServeEngine:
         self.samp_topk[s] = 0
         self.samp_topp[s] = 1.0
         self.samp_keys[s] = 0
+
+    def _finish(self, s: int, reason: str):
+        req = self.active[s]
+        req.done = True
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        req.t_finish = time.perf_counter()
+        self._clear_slot(s)
         if self.kv is not None:
             self.kv.free_slot(s)  # pages return to the pool immediately
         self.scheduler.on_finish(req)
         self._finished.append(req)
 
+    # ----------------------------------------------------------- preempt
+    def _ensure_ckpt_fns(self):
+        """Dense checkpoint/restore steps, compiled on first preemption
+        and shared module-wide (same memoization rationale as the step
+        cache).  ``copy_out`` slices one slot's stripe (then device_get'd
+        to a host buffer); ``copy_in`` rewrites it in place (donated)."""
+        if self._copy_out is None:
+            self._copy_out, self._copy_in = _ckpt_fns(self.model,
+                                                      self.max_len)
+
+    def _execute_preemption(self, pre):
+        """Executor half of preemption: capture the slot's device state
+        into the request's checkpoint and park the slot.  The scheduler
+        already did the host half (page detach, DRF credit, requeue);
+        this MUST run before any admission reuses the slot."""
+        s, req = pre.slot, pre.req
+        if self.kv is not None:
+            kv_snap = None  # zero-copy: the detached page chain IS the KV
+        else:
+            self._ensure_ckpt_fns()
+            kv_snap = jax.device_get(self._copy_out(self.caches,
+                                                    jnp.int32(s)))
+        req._ckpt = Checkpoint(pos=int(self.pos[s]),
+                               last_token=int(self.tokens[s, 0]),
+                               pages=getattr(req, "_ckpt_pages", None),
+                               kv=kv_snap)
+        req.state = RequestState.PREEMPTED
+        req.preempt_count += 1
+        self._clear_slot(s)
+
+    def _execute_resume(self, s: int, req: Request):
+        """Restore a checkpointed request into slot ``s`` at
+        ``pos = checkpoint`` — no prefill re-run.  Paged: the page table
+        row was remapped by the scheduler (attach_slot).  Dense: the
+        host-side stripe snapshot is written back in place (full stripe,
+        so SSM/recurrent state restores exactly and the previous
+        occupant leaves no residue)."""
+        ck = req._ckpt
+        if self.kv is None:
+            self._ensure_ckpt_fns()
+            self.caches = self._copy_in(self.caches,
+                                        jax.device_put(ck.kv),
+                                        jnp.int32(s))
+        self.pos[s] = ck.pos
+        self.tokens[s, 0] = ck.last_token
+        req._feed = deque()  # type: ignore
+        req._ckpt = None
+        req._ckpt_pages = None
+        req._preempted = False
+        req.state = RequestState.DECODE
+
     def _execute_admission(self, adm):
         """Executor half of admission: apply one scheduler decision —
-        device prefill / slot reset / token-feed setup."""
+        device prefill / checkpoint restore / slot reset / token-feed
+        setup."""
         s, req = adm.slot, adm.req
         self.active[s] = req
-        req.state = RequestState.PREFILL
         sp = req.sampling
         self.samp_temp[s] = sp.temperature
         self.samp_topk[s] = sp.top_k
         self.samp_topp[s] = sp.top_p
         self.samp_keys[s] = sp.key_data(req.req_id)
+        if adm.resume:
+            self._execute_resume(s, req)
+            return
+        req.state = RequestState.PREFILL
         if self.kv is not None:
             # CoW pages (adm.kv.cow) need no device copy here: they span
             # [start, matched), so the first re-run prefill chunk rewrites
@@ -459,12 +575,15 @@ class ServeEngine:
     def _admit_continuous(self):
         """Decide/execute rounds until the scheduler has nothing to admit
         (a prefilled request can finish instantly and free its slot for
-        the same tick, hence the loop)."""
+        the same tick, hence the loop).  Preemptions execute first: a
+        slot must be checkpointed before its next occupant prefills."""
         while True:
-            decisions = self.scheduler.decide(self.active)
-            if not decisions:
+            plan = self.scheduler.decide(self.active)
+            if not plan:
                 return
-            for adm in decisions:
+            for pre in plan.preemptions:
+                self._execute_preemption(pre)
+            for adm in plan.admissions:
                 self._execute_admission(adm)
 
     def _prefill_slot(self, s: int, req: Request, start: int = 0):
@@ -539,7 +658,7 @@ class ServeEngine:
         self.caches = jax.tree.map(lambda c: jnp.zeros_like(c), self.caches)
         self.pos[:] = 0
         self.tokens[:] = 0
-        for adm in self.scheduler.decide(self.active):
+        for adm in self.scheduler.decide(self.active).admissions:
             s, req = adm.slot, adm.req
             self.active[s] = req
             req.state = RequestState.PREFILL
@@ -554,18 +673,14 @@ class ServeEngine:
         return self._step_continuous()
 
     def _step_for_splits(self, splits: int, sampled: bool):
-        """Dense decode step with a given split-K fan-out, compiled once
-        per (fan-out, sampled) pair (fan-outs from the small set the
-        heuristic emits: 1, 2, 4, 8)."""
-        fn = self._step_by_splits.get((splits, sampled))
-        if fn is None:
-            model = type(self.model)(
-                self.model.cfg,
-                self.model.knobs.with_(decode_splits=splits))
-            fn = jax.jit(make_serve_step(model, sampled=sampled),
-                         donate_argnums=(1,))
-            self._step_by_splits[(splits, sampled)] = fn
-        return fn
+        """Dense decode step with a given split-K fan-out (fan-outs from
+        the small set the heuristic emits: 1, 2, 4, 8).  Resolution goes
+        through the module-level step cache, so every engine over the
+        same model shares one compiled callable per fan-out."""
+        if splits <= 1:
+            return self._step_sampled if sampled else self._step
+        return compiled_step(self.model, "serve", sampled=sampled,
+                             decode_splits=splits)
 
     def _step_continuous(self) -> int:
         self._admit_emitted = 0

@@ -4,6 +4,7 @@ step, one serve (decode) step — these are the "MPI tasks" of DESIGN.md §2.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable
 
 import jax
@@ -198,6 +199,78 @@ def make_paged_prefill_chunk_step(model, page_size: int,
         return tok, new_caches
 
     return sampled_chunk_step if sampled else prefill_chunk_step
+
+
+# ------------------------------------------------- compiled-step LRU cache
+# One module-level cache for every serving step the engines jit.  The
+# pre-PR-4 per-engine dict meant each ServeEngine recompiled identical
+# steps — every benchmark mode/policy sweep and ci.sh smoke paid XLA
+# compilation again for the same (model config, step kind).  Keyed on
+# (cfg, knobs, kind, sampled, page_size): cfg and RuntimeKnobs are frozen
+# dataclasses, so two engines over equal configs share one jitted
+# callable (and with it jax's compilation cache).  Bounded LRU; falls
+# back to an uncached build if a config is unhashable (custom shard_fn
+# closures etc.).
+_STEP_KINDS = {
+    "serve": lambda m, ps, s: make_serve_step(m, sampled=s),
+    "prefill_chunk": lambda m, ps, s: make_prefill_chunk_step(m, sampled=s),
+    "paged_serve": lambda m, ps, s: make_paged_serve_step(m, ps, sampled=s),
+    "paged_prefill_chunk":
+        lambda m, ps, s: make_paged_prefill_chunk_step(m, ps, sampled=s),
+    "decode_one": lambda m, ps, s: m.decode_step,
+}
+_STEP_CACHE: OrderedDict = OrderedDict()
+_STEP_CACHE_MAX = 64
+_step_cache_hits = 0
+_step_cache_misses = 0
+
+
+def step_cache_stats() -> dict:
+    return {"hits": _step_cache_hits, "misses": _step_cache_misses,
+            "size": len(_STEP_CACHE)}
+
+
+def compiled_fn(key, build: Callable, donate=()) -> Callable:
+    """``jax.jit(build(), donate_argnums=donate)``, memoized in the
+    shared bounded LRU.  ``build`` runs only on a miss.  Unhashable keys
+    (custom shard_fn closures etc.) fall back to an uncached build.
+    The serving engine routes every compiled callable — decode/prefill
+    steps and the checkpoint copy_out/copy_in pair — through here, so
+    there is exactly one cache to size and instrument."""
+    global _step_cache_hits, _step_cache_misses
+    try:
+        fn = _STEP_CACHE.get(key)
+    except TypeError:
+        key = None  # unhashable: build uncached
+        fn = None
+    if fn is not None:
+        _step_cache_hits += 1
+        _STEP_CACHE.move_to_end(key)
+        return fn
+    _step_cache_misses += 1
+    fn = jax.jit(build(), donate_argnums=donate)
+    if key is not None:
+        _STEP_CACHE[key] = fn
+        while len(_STEP_CACHE) > _STEP_CACHE_MAX:
+            _STEP_CACHE.popitem(last=False)
+    return fn
+
+
+def compiled_step(model, kind: str, *, sampled: bool = False,
+                  page_size: int = 0, decode_splits=None) -> Callable:
+    """Jitted serving step for ``model`` (donating the caches), memoized
+    module-wide.  ``decode_splits`` overrides the knob for the split-K
+    variants (the autotuner's per-fanout steps share the cache too)."""
+    knobs = (model.knobs if decode_splits is None
+             else model.knobs.with_(decode_splits=decode_splits))
+
+    def build():
+        mdl = (model if knobs is model.knobs
+               else type(model)(model.cfg, knobs))
+        return _STEP_KINDS[kind](mdl, page_size, sampled)
+
+    return compiled_fn((model.cfg, knobs, kind, sampled, page_size),
+                       build, donate=(1,))
 
 
 # -------------------------------------------------------- split-K autotune

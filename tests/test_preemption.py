@@ -1,0 +1,360 @@
+"""Preemptive serving: slot checkpoint/restore (dense host snapshot via
+copy_cache_out/in, paged zero-copy page-chain detach), weighted-DRF SLO
+tiers, victim policies, preempt/resume/finish page-refcount balance, and
+the module-level compiled-step cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import LM, RuntimeKnobs
+from repro.runtime import steps
+from repro.runtime.kv_pool import KVCacheManager
+from repro.runtime.scheduler import (VICTIM_POLICIES, Scheduler,
+                                     ServeResource, get_victim_policy)
+from repro.runtime.serve import (Request, RequestState, ServeConfig,
+                                 ServeEngine)
+
+_CACHE = {}
+
+
+def _model():
+    if "model" not in _CACHE:
+        cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                                  num_layers=2, vocab_size=64)
+        model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+        _CACHE["model"] = model
+        _CACHE["params"] = model.init(jax.random.PRNGKey(0))
+    return _CACHE["model"], _CACHE["params"]
+
+
+def _engine(**kw):
+    model, params = _model()
+    return ServeEngine(model, params, ServeConfig(**kw))
+
+
+def _solo_outputs(prompts, max_new=8):
+    """Uninterrupted greedy reference for each prompt (single-slot
+    engine, shared across the module via the compiled-step cache)."""
+    eng = _CACHE.setdefault("solo", _engine(batch_slots=1, max_len=64))
+    out = []
+    for i, p in enumerate(prompts):
+        out.append(eng.submit(Request(i, p.copy(),
+                                      max_new_tokens=max_new)).result()
+                   .output)
+    return out
+
+
+def _prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 64, size=int(rng.integers(2, 6)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _flood(eng, prompts, *, n_gold, max_new=8):
+    """Gold floods, then free trickles in after two ticks; returns the
+    drained requests by id."""
+    for i in range(n_gold):
+        eng.submit(Request(i, prompts[i].copy(), max_new_tokens=max_new,
+                           tenant="gold"))
+    eng.step()
+    eng.step()
+    for i in range(n_gold, len(prompts)):
+        eng.submit(Request(i, prompts[i].copy(), max_new_tokens=max_new,
+                           tenant="free"))
+    return {r.req_id: r for r in eng.run()}
+
+
+_WEIGHTED = dict(policy="drf-fair", tenant_weights={"gold": 3, "free": 1},
+                 preempt=True, victim_policy="lowest-weight-share-first")
+
+
+# ------------------------------------------------- bitwise round trip
+@pytest.mark.parametrize("cache_kw", [
+    {},  # dense: host-side stripe snapshot
+    {"cache": "paged", "page_size": 8},  # paged: zero-copy page detach
+], ids=["dense", "paged"])
+def test_preempted_request_resumes_bitwise_identical(cache_kw):
+    """A preempted-then-resumed request's final token stream equals its
+    uninterrupted greedy run — the checkpoint restores pos, last token,
+    and KV exactly (sampling keys fold position, never slot)."""
+    prompts = _prompts(8)
+    ref = _solo_outputs(prompts)
+    eng = _engine(batch_slots=4, max_len=64, **_WEIGHTED, **cache_kw)
+    done = _flood(eng, prompts, n_gold=6)
+    assert eng.scheduler.preempted_total >= 1
+    assert sum(r.preempt_count for r in done.values()) >= 1
+    for i in range(len(prompts)):
+        assert done[i].output == ref[i], \
+            f"request {i} (preempted {done[i].preempt_count}x) diverged"
+    assert all(v == 0.0 for v in eng.scheduler.shares().values())
+
+
+def test_no_page_leak_after_preempt_resume_finish():
+    """Refcount balance: after a flood with preemptions fully drains,
+    every non-null page is free again (prefix cache off so cache-held
+    pages don't mask a leak)."""
+    prompts = _prompts(9, seed=3)
+    eng = _engine(batch_slots=4, max_len=64, cache="paged", page_size=8,
+                  prefix_cache=False, **_WEIGHTED)
+    _flood(eng, prompts, n_gold=7)
+    assert eng.scheduler.preempted_total >= 1
+    assert eng.kv.pool.in_use == 0
+    assert not np.any(np.asarray(eng.kv.pool.ref[1:]))
+    assert not np.any(eng.kv.page_table)
+
+
+def test_weighted_drf_share_converges_under_flood():
+    """With weights {gold: 3, free: 1} over 4 slots, preemption clamps
+    gold to exactly its 3/(3+1) entitlement while free has queued work,
+    and the PREEMPTED lifecycle state is observable."""
+    prompts = _prompts(12, seed=5)
+    eng = _engine(batch_slots=4, max_len=64, **_WEIGHTED)
+    for i in range(9):
+        eng.submit(Request(i, prompts[i].copy(), max_new_tokens=8,
+                           tenant="gold"))
+    eng.step()
+    handles = [eng.submit(Request(i, prompts[i].copy(), max_new_tokens=4,
+                                  tenant="free"))
+               for i in range(9, 12)]
+    seen_preempted = False
+    gold_shares = []
+    while eng.queue or any(r is not None for r in eng.active):
+        eng.step()
+        seen_preempted |= any(r.state is RequestState.PREEMPTED
+                              for r in eng.queue)
+        if any(r.tenant == "free" for r in eng.queue):
+            gold = sum(1 for r in eng.active
+                       if r is not None and r.tenant == "gold")
+            gold_shares.append(gold / 4)
+    assert seen_preempted
+    assert max(gold_shares) == pytest.approx(0.75)
+    assert all(h.done for h in handles)
+
+
+def test_preempt_requires_continuous_mode():
+    with pytest.raises(ValueError, match="continuous"):
+        _engine(batch_slots=2, max_len=32, mode="wave", preempt=True)
+
+
+# ------------------------------------------------ scheduler host logic
+def _decoding(i, tenant, seq):
+    r = Request(i, np.arange(1, 3, dtype=np.int32), max_new_tokens=8,
+                tenant=tenant)
+    r.state = RequestState.DECODE
+    r.output = [1]
+    r._feed = None
+    r._admit_seq = seq
+    r._drf_charged = ServeResource(slots=1, kv=10)
+    return r
+
+
+def test_two_phase_decide_swaps_only_on_strict_improvement():
+    """Phase 2 preempts exactly while the queued tenant's weighted share
+    after admission stays strictly below a victim tenant's before it —
+    gold (weight 3) reclaims 3 of 4 slots from free, then stops."""
+    sched = Scheduler("drf-fair", slots=4, max_len=32,
+                      weights={"gold": 3, "free": 1}, preempt=True,
+                      victim="lowest-weight-share-first")
+    free = [_decoding(i, "free", i) for i in range(4)]
+    for r in free:
+        sched.allocator.charge("free", r._drf_charged)
+    for i in range(4, 8):
+        sched.submit(Request(i, np.arange(1, 3, dtype=np.int32),
+                             max_new_tokens=8, tenant="gold"))
+    plan = sched.decide(free)
+    assert len(plan.preemptions) == 3
+    assert len(plan.admissions) == 3
+    assert all(p.req.tenant == "free" for p in plan.preemptions)
+    assert all(a.req.tenant == "gold" for a in plan.admissions)
+    # the victims re-entered the queue at the front, marked for resume
+    assert [r._preempted for r in list(sched.queue)[:3]] == [True] * 3
+    # weighted shares equalized: 3/4 / 3 == 1/4 / 1
+    ws = sched.allocator.weighted_shares()
+    assert ws["gold"] == pytest.approx(ws["free"])
+
+
+def test_same_tenant_flood_never_self_preempts():
+    sched = Scheduler("drf-fair", slots=2, max_len=32, preempt=True)
+    running = [_decoding(i, "a", i) for i in range(2)]
+    for r in running:
+        sched.allocator.charge("a", r._drf_charged)
+    sched.submit(Request(9, np.arange(1, 3, dtype=np.int32), tenant="a"))
+    plan = sched.decide(running)
+    assert not plan.preemptions and not plan.admissions
+
+
+def test_victim_policy_registry_and_selection():
+    assert set(VICTIM_POLICIES) == {"youngest-first",
+                                    "lowest-weight-share-first"}
+    for name in VICTIM_POLICIES:
+        assert get_victim_policy(name).name == name
+    sched = Scheduler("drf-fair", slots=3, max_len=32,
+                      weights={"a": 1, "b": 1, "c": 8}, preempt=True,
+                      victim="youngest-first")
+    running = [_decoding(0, "a", 7), _decoding(1, "b", 3),
+               _decoding(2, "b", 11)]
+    for r in running:
+        sched.allocator.charge(r.tenant, r._drf_charged)
+    sched.submit(Request(9, np.arange(1, 3, dtype=np.int32), tenant="c"))
+    plan = sched.decide(running)
+    # youngest overall (seq 11, tenant b) regardless of tenant shares
+    assert [p.slot for p in plan.preemptions] == [2]
+    sched2 = Scheduler("drf-fair", slots=3, max_len=32,
+                       weights={"a": 1, "b": 3, "c": 8}, preempt=True,
+                       victim="lowest-weight-share-first")
+    running = [_decoding(0, "a", 7), _decoding(1, "b", 3),
+               _decoding(2, "b", 11)]
+    for r in running:
+        sched2.allocator.charge(r.tenant, r._drf_charged)
+    sched2.submit(Request(9, np.arange(1, 3, dtype=np.int32), tenant="c"))
+    plan = sched2.decide(running)
+    # tenant a's weighted share (1/3 per unit weight) tops b's (2/3 over
+    # weight 3): a is furthest over entitlement, so its slot is evicted
+    assert [p.slot for p in plan.preemptions] == [0]
+
+
+def test_mid_prefill_requests_are_not_preemptible():
+    sched = Scheduler("drf-fair", slots=1, max_len=32, preempt=True)
+    r = _decoding(0, "a", 0)
+    r.state = RequestState.PREFILL
+    sched.allocator.charge("a", r._drf_charged)
+    sched.submit(Request(9, np.arange(1, 3, dtype=np.int32), tenant="b"))
+    assert not sched.decide([r]).preemptions
+
+
+def test_backpressure_falls_back_to_resuming_detained_chain():
+    """Livelock guard: when the policy's fresh choice cannot reserve
+    pages, a queued PREEMPTED request resumes instead (zero new pages) —
+    its detained chain only drains back to the pool by completing, so a
+    non-FIFO policy must not park it behind an unadmittable request."""
+    kv = KVCacheManager(slots=2, max_len=32, page_size=8, num_pages=6,
+                        prefix_cache=False)
+    sched = Scheduler("sjf", slots=2, max_len=32, kv=kv, preempt=True)
+    held = Request(0, np.arange(1, 10, dtype=np.int32), max_new_tokens=8,
+                   tenant="a")  # 17 tokens -> 3 of the 5 pool pages
+    res = kv.admit(0, held.prompt, held.max_new_tokens)
+    held._drf_charged = ServeResource(slots=1, kv=3)
+    sched.allocator.charge("a", held._drf_charged)
+    held._ckpt_pages = kv.detach_slot(0)
+    held._preempted = True
+    sched.allocator.credit("a", ServeResource(slots=1, kv=0))
+    held._drf_charged = held._drf_charged - ServeResource(slots=1, kv=0)
+    fresh = Request(1, np.arange(1, 10, dtype=np.int32),
+                    max_new_tokens=8, tenant="b")  # needs 3, only 2 free
+    sched.submit(fresh)  # sjf ties -> FIFO: fresh first
+    sched.submit(held)
+    plan = sched.decide([None, None])
+    assert [a.req.req_id for a in plan.admissions] == [0]
+    assert plan.admissions[0].resume
+    assert list(sched.queue) == [fresh]  # retried once pages free up
+    assert res.blocks == kv._held[plan.admissions[0].slot]
+
+
+def test_pages_needed_now_matches_admit_consumption():
+    """The scheduler's preemption pre-check sizes fresh admissions with
+    ``pages_needed_now`` — it must equal what ``admit`` actually takes,
+    including prefix-cache sharing and CoW headroom."""
+    kv = KVCacheManager(slots=2, max_len=64, page_size=8, num_pages=20,
+                        chunk=8)
+    prompt = np.arange(1, 25, dtype=np.int32)  # 3 full pages
+    est = kv.pages_needed_now(prompt, 8)
+    before = kv.pool.available
+    kv.admit(0, prompt, 8)
+    assert before - kv.pool.available == est
+    kv.register_prefix(0, prompt)
+    est_shared = kv.pages_needed_now(prompt, 8)
+    assert est_shared < est  # prefix hit: shares pages, pays only CoW
+    before = kv.pool.available
+    kv.admit(1, prompt, 8)
+    assert before - kv.pool.available == est_shared
+    assert kv.fits_now(prompt, 8)
+
+
+def test_fits_now_excludes_own_prefix_from_evictable():
+    """A request's own cached prefix pages are increfed by admit's
+    lookup before eviction runs, so fits_now must not count them as
+    reclaimable headroom (miscounting caused an unsatisfiable swap)."""
+    kv = KVCacheManager(slots=2, max_len=32, page_size=8, num_pages=5,
+                        chunk=8)
+    prompt = np.arange(1, 17, dtype=np.int32)  # 2 full pages
+    kv.admit(0, prompt, 8)  # 3 pages: 2 prompt + 1 budget
+    kv.register_prefix(0, prompt)
+    kv.free_slot(0)  # only the prefix cache holds the 2 prompt pages now
+    kv.admit(1, np.arange(50, 59, dtype=np.int32), 8)  # eats the rest
+    assert kv.pool.available == 0
+    # full-prompt hit: needs 1 CoW + 1 budget page; the only ref-1 pages
+    # are its OWN prefix -> admit cannot evict them -> must report unfit
+    assert not kv.fits_now(prompt, 8)
+    assert kv.admit(0, prompt, 8) is None  # fits_now agreed with admit
+
+
+def test_failed_swap_rolls_back_preemption(monkeypatch):
+    """If the admission paired with a preemption fails, the host-side
+    preemption is undone: the victim keeps its slot and pages, no Plan
+    entry leaks, and the DRF book returns to its pre-swap state."""
+    kv = KVCacheManager(slots=2, max_len=32, page_size=8, num_pages=9,
+                        prefix_cache=False)
+    sched = Scheduler("drf-fair", slots=2, max_len=32, kv=kv,
+                      preempt=True, weights={"a": 1, "b": 8})
+    victims = []
+    for s, i in enumerate(range(2)):
+        r = _decoding(i, "a", i)
+        res = kv.admit(s, r.prompt, r.max_new_tokens)
+        r._drf_charged = ServeResource(slots=1, kv=len(res.blocks))
+        sched.allocator.charge("a", r._drf_charged)
+        victims.append(r)
+    monkeypatch.setattr(kv, "admit", lambda *a, **k: None)
+    shares_before = sched.allocator.shares()
+    held_before = [list(h) for h in kv._held]
+    sched.submit(Request(9, np.arange(1, 3, dtype=np.int32), tenant="b"))
+    plan = sched.decide(victims)
+    assert not plan.preemptions and not plan.admissions
+    assert sched.preempted_total == 0
+    assert not any(getattr(r, "_preempted", False) for r in victims)
+    assert [list(h) for h in kv._held] == held_before
+    # book restored: a's share untouched, b registered but holds nothing
+    assert sched.allocator.shares()["a"] == shares_before["a"]
+    assert sched.allocator.shares().get("b", 0.0) == 0.0
+    assert len(sched.queue) == 1  # the unadmittable request stays queued
+
+
+def test_paged_detach_attach_round_trip():
+    kv = KVCacheManager(slots=2, max_len=32, page_size=8, num_pages=9,
+                        prefix_cache=False)
+    res = kv.admit(0, np.arange(1, 12, dtype=np.int32), max_new=4)
+    pages = list(res.blocks)
+    refs_before = kv.pool.ref.copy()
+    detached = kv.detach_slot(0)
+    assert detached == pages
+    assert not np.any(kv.page_table[0])
+    assert np.array_equal(kv.pool.ref, refs_before)  # zero-copy: no churn
+    kv.attach_slot(1, detached)
+    assert list(kv.page_table[1, :len(pages)]) == pages
+    assert np.array_equal(kv.pool.ref, refs_before)
+    kv.free_slot(1)
+    assert kv.pool.in_use == 0
+
+
+# ------------------------------------------------- compiled-step cache
+def test_compiled_step_cache_shared_across_engines():
+    """The per-fanout/per-variant compiled steps are a module-level LRU
+    keyed on (cfg, knobs, kind, sampled, page_size): a second engine over
+    the same model reuses the first's jitted callables (no recompile)."""
+    model, params = _model()
+    e1 = _engine(batch_slots=2, max_len=32)
+    before = steps.step_cache_stats()
+    e2 = _engine(batch_slots=2, max_len=32)
+    after = steps.step_cache_stats()
+    assert e2._step is e1._step
+    assert e2._step_sampled is e1._step_sampled
+    assert e2._decode_one is e1._decode_one
+    assert after["hits"] >= before["hits"] + 3
+    assert after["misses"] == before["misses"]
+    # distinct configs miss (different max_len is fine — shapes are not
+    # part of the key; a different knob set is a different key)
+    other = LM(model.cfg, RuntimeKnobs(cache_dtype=jnp.bfloat16))
+    assert steps.compiled_step(other, "serve") is not e1._step

@@ -7,6 +7,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+pytestmark = pytest.mark.slow  # hypothesis-heavy: full-suite lane only
+
 from repro.core import (Cluster, ClusterSpec, DRFAllocator, JobSpec,
                         MinHostPolicy, ResourceSpec, SpreadPolicy)
 from repro.data import MarkovSynthetic, SyntheticDataset, host_shard

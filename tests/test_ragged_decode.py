@@ -133,6 +133,7 @@ def test_chunked_prefill_rejected_for_ssm_hybrid():
     assert not model.supports_chunked_prefill()
 
 
+@pytest.mark.slow  # multi-arch engine-equality suite: full-suite lane
 @pytest.mark.parametrize("arch,extra", [
     ("internlm2-1.8b", dict(num_layers=2, vocab_size=64)),
     ("zamba2-2.7b", dict(vocab_size=64)),

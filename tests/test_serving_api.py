@@ -63,7 +63,7 @@ def test_priority_policy_orders_by_priority_then_fifo():
         sched.submit(_req(i, priority=pr))
     order = []
     while sched.queue:
-        adm = sched.decide([None])
+        adm = sched.decide([None]).admissions
         order.append(adm[0].req.req_id)
     assert order == [1, 2, 3, 0]
 
@@ -75,7 +75,7 @@ def test_sjf_policy_prefers_short_jobs():
     sched.submit(_req(2, plen=2, max_new=2))
     order = []
     while sched.queue:
-        order.append(sched.decide([None])[0].req.req_id)
+        order.append(sched.decide([None]).admissions[0].req.req_id)
     assert order == [1, 2, 0]
 
 
@@ -85,7 +85,7 @@ def test_drf_policy_alternates_tenants_and_credits_on_finish():
         sched.submit(_req(i, tenant="a"))
     for i in range(4, 6):
         sched.submit(_req(i, tenant="b"))
-    adm = sched.decide([None, None])
+    adm = sched.decide([None, None]).admissions
     assert [a.req.tenant for a in adm] == ["a", "b"]
     shares = sched.policy.shares()
     assert shares["a"] == pytest.approx(shares["b"])
@@ -176,6 +176,7 @@ try:
 except ImportError:
     pass
 else:
+    @pytest.mark.slow
     @settings(max_examples=40, deadline=None)
     @given(seed=st.integers(0, 10_000), batch=st.integers(1, 4),
            vocab=st.integers(4, 40))
@@ -194,6 +195,7 @@ else:
         assert np.array_equal(np.asarray(out),
                               np.asarray(jnp.argmax(logits, -1)))
 
+    @pytest.mark.slow
     @settings(max_examples=40, deadline=None)
     @given(seed=st.integers(0, 10_000), k=st.integers(1, 6),
            p=st.floats(0.05, 1.0))
@@ -216,6 +218,7 @@ else:
             # exclusive-cumsum nucleus: mass strictly below tok < p
             assert rank == 0 or float(np.cumsum(probs)[rank - 1]) < p
 
+    @pytest.mark.slow
     @settings(max_examples=8, deadline=None)
     @given(seed=st.integers(0, 10_000), n=st.integers(1, 5))
     def test_temp0_engine_bitwise_hypothesis(seed, n):
