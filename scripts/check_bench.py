@@ -41,7 +41,7 @@ import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
-DEFAULT_NAMES = ("serve_throughput", "paged_serve")
+DEFAULT_NAMES = ("serve_throughput", "paged_serve", "spec_decode")
 
 # (json path into the payload, kind): kind "rate" = higher is better,
 # "latency" = lower is better, gated by the respective tolerance
@@ -60,6 +60,10 @@ METRICS = {
     "paged_serve": [
         (("paged", "tok_per_s"), "rate"),
         (("paged", "p99_ttft_s"), "latency"),
+    ],
+    "spec_decode": [
+        (("spec", "tok_per_s"), "rate"),
+        (("spec_paged", "tok_per_s"), "rate"),
     ],
 }
 
@@ -80,6 +84,19 @@ BOUNDS = {
          lambda v: bool(v), "preempted request replayed bitwise-identical"),
     ],
     "paged_serve": [],
+    "spec_decode": [
+        (("spec", "acceptance_rate"), lambda v: v >= 0.3,
+         "n-gram drafter acceptance holds on the repetition trace"),
+        (("spec", "tokens_per_tick"), lambda v: v >= 1.5,
+         "speculation amortizes ticks (>= 1.5 verified tokens/tick)"),
+        (("spec_speedup",), lambda v: v >= 1.3,
+         "speculative decode >= 1.3x baseline tokens/s (same process, "
+         "machine-independent ratio)"),
+        (("replay_bitwise_identical",), lambda v: bool(v),
+         "speculative output bitwise-identical to baseline decode"),
+        (("spec_paged", "pool_drained"), lambda v: bool(v),
+         "paged spec run returned every page (no rollback leak)"),
+    ],
 }
 
 

@@ -5,9 +5,13 @@
 #   bash scripts/ci.sh [lint|tier1|smoke|bench|all]
 #
 #   lint   ruff check (skipped with a warning if ruff is not installed)
-#   tier1  fast pytest lane:  -m "not slow"  (the per-push CI lane)
+#   tier1  fast pytest lane:  -m "not slow"  (the per-push CI lane);
+#          with pytest-cov installed it also enforces a line-coverage
+#          floor over src/repro/runtime/ (skipped with a warning
+#          otherwise — containers without the plugin still gate tests)
 #   smoke  per-arch smoke_all + serving launcher smokes (paged, every
-#          admission policy, preemption + weighted SLO tiers)
+#          admission policy, preemption + weighted SLO tiers,
+#          speculative decode)
 #   bench  dry benchmarks + the regression gate (scripts/check_bench.py)
 #   all    full pytest (the pre-merge lane) + smoke + bench  [default]
 #
@@ -32,7 +36,17 @@ lint() {
 
 tier1() {
     echo "== tier-1 pytest (-m 'not slow') =="
-    python -m pytest -x -q -m "not slow"
+    if python -c "import pytest_cov" >/dev/null 2>&1; then
+        # line-coverage floor for the serving runtime: the layer every
+        # PR touches and the one whose regressions are silent (a dead
+        # branch in the scheduler/engine still "passes" smoke runs)
+        python -m pytest -x -q -m "not slow" \
+            --cov=repro.runtime --cov-report=term --cov-fail-under=80
+    else
+        echo "pytest-cov not installed — running tier1 without the" \
+             "coverage floor (CI enforces it)"
+        python -m pytest -x -q -m "not slow"
+    fi
 }
 
 full_tests() {
@@ -61,6 +75,14 @@ smoke() {
         --policy drf-fair --tenants 2 \
         --tenant-weights "tenant-0=3,tenant-1=1" --preempt \
         --victim-policy lowest-weight-share-first
+
+    echo "== speculative decode smoke (launcher, dense + paged) =="
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 6 --slots 2 --max-len 64 --max-new 8 \
+        --speculate --draft-k 3
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 6 --slots 2 --max-len 64 --max-new 8 \
+        --speculate --draft-k 3 --cache paged --page-size 8
 }
 
 bench() {

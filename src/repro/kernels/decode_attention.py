@@ -26,6 +26,14 @@ Ragged kernel contract (the serving hot path relies on this):
   and KV blocks fully masked for a short slot — issue **no** MXU work via
   ``pl.when``; inactive slots write zeros.  A scalar ``pos`` is still
   accepted (broadcast) for the legacy lockstep path.
+* **Multi-token (speculative verify)**: ``q`` may carry ``T > 1`` query
+  rows per slot (``(B, H, T, D)``).  Row ``t`` sits at absolute position
+  ``pos[b] + t`` and attends keys ``kpos <= pos[b] + t`` — causal against
+  the prefix and *within* the draft block (whose K/V were written before
+  the call).  The online softmax keeps a per-row (max, denom, acc)
+  triple; rows fully masked in a needed block contribute exactly zero.
+  The split-K variant stays single-token (speculative ticks use the
+  single-pass kernel).
 """
 from __future__ import annotations
 
@@ -45,16 +53,19 @@ def _normalize_pos(pos, b):
     return jnp.broadcast_to(pos, (b,))
 
 
-def _block_needed(pos, active, k_start, block_k, window):
-    needed = jnp.logical_and(k_start <= pos, active > 0)
+def _block_needed(pos, active, k_start, block_k, window, tq: int = 1):
+    """Any of the ``tq`` query rows (absolute positions pos..pos+tq-1)
+    attends a key in [k_start, k_start + block_k)."""
+    needed = jnp.logical_and(k_start <= pos + (tq - 1), active > 0)
     if window:
+        # lowest window bound across rows is row 0's: kpos > pos - window
         needed = jnp.logical_and(needed, k_start + block_k - 1 > pos - window)
     return needed
 
 
 def _decode_kernel(pos_ref, act_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *, window: int, block_k: int,
-                   scale: float):
+                   scale: float, tq: int):
     ib = pl.program_id(0)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -69,21 +80,26 @@ def _decode_kernel(pos_ref, act_ref, q_ref, k_ref, v_ref, o_ref,
 
     k_start = ik * block_k
 
-    @pl.when(_block_needed(pos, active, k_start, block_k, window))
+    @pl.when(_block_needed(pos, active, k_start, block_k, window, tq))
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)  # (1, D)
+        q = q_ref[0, 0].astype(jnp.float32)  # (tq, D)
         k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
         v = v_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
-        mask = kpos <= pos
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tq, block_k), 1)
+        qpos = pos + jax.lax.broadcasted_iota(jnp.int32, (tq, block_k), 0)
+        mask = kpos <= qpos
         if window:
-            mask &= pos - kpos < window
+            mask &= qpos - kpos < window
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
+        # mask-gated exp: a row fully masked in a *needed* block (short
+        # draft rows under windowing) has m_new == NEG_INF, where bare
+        # exp(s - m_new) would contribute spurious ones — valid entries
+        # are bitwise unchanged (masked s underflows to 0 either way)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
         pv = jax.lax.dot_general(p.astype(v.dtype), v,
@@ -114,40 +130,43 @@ def _prep(q, k_cache, pos, active, block_k):
 
 def decode_attention_tpu(q, k_cache, v_cache, pos, *, active=None, window=0,
                          block_k=512, interpret=False):
-    """q (B, H, 1, D); caches (B, KV, S, D); pos scalar or (B,) int32.
+    """q (B, H, T, D); caches (B, KV, S, D); pos scalar or (B,) int32.
 
-    Returns (B, H, 1, D).  ``active`` (B,) 0/1 gates per-slot work; defaults
-    to ``pos >= 0`` so an engine can park free slots at pos = -1.
+    Returns (B, H, T, D).  ``active`` (B,) 0/1 gates per-slot work; defaults
+    to ``pos >= 0`` so an engine can park free slots at pos = -1.  T > 1 is
+    the speculative multi-token verify block: query row ``t`` attends keys
+    ``kpos <= pos[b] + t``.
     """
     b, h, d, kv, s, block_k, pos, active = _prep(q, k_cache, pos, active,
                                                  block_k)
+    tq = q.shape[2]
     g = h // kv
     nk = s // block_k
     scale = d ** -0.5
     kernel = functools.partial(_decode_kernel, window=window, block_k=block_k,
-                               scale=scale)
+                               scale=scale, tq=tq)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, h, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, d),
+            pl.BlockSpec((1, 1, tq, d),
                          lambda b_, h_, ik, pos_, act_: (b_, h_, 0, 0)),
             pl.BlockSpec((1, 1, block_k, d),
                          lambda b_, h_, ik, pos_, act_: (b_, h_ // g, ik, 0)),
             pl.BlockSpec((1, 1, block_k, d),
                          lambda b_, h_, ik, pos_, act_: (b_, h_ // g, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, d),
+        out_specs=pl.BlockSpec((1, 1, tq, d),
                                lambda b_, h_, ik, pos_, act_: (b_, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, d), jnp.float32),
         ],
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq, d), q.dtype),
         interpret=interpret,
     )(pos, active, q, k_cache, v_cache)
 
@@ -224,7 +243,11 @@ def decode_attention_splitk_tpu(q, k_cache, v_cache, pos, *, active=None,
     computes an independent online softmax per range; phase 2 combines the
     per-split (max, denom, acc) triples.  Use for long contexts where a
     single sequential KV stream leaves the memory system under-subscribed.
+    Single-token only — speculative (T > 1) ticks take the single-pass
+    kernel instead.
     """
+    assert q.shape[2] == 1, ("split-K decode is single-token; multi-token "
+                             "verify uses decode_attention_tpu", q.shape)
     b, h, d, kv, s, block_k, pos, active = _prep(q, k_cache, pos, active,
                                                  block_k)
     g = h // kv

@@ -42,17 +42,20 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,
                                              "num_splits", "interpret"))
 def decode_attention(q, k_cache, v_cache, pos, *, active=None, window=0,
                      block_k=512, num_splits=1, interpret=None):
-    """Model layout: q (B,1,H,D); caches (B,S,KV,D) -> (B,1,H,D).
+    """Model layout: q (B,T,H,D); caches (B,S,KV,D) -> (B,T,H,D).
 
     ``pos`` may be a scalar (lockstep) or a (B,) vector (ragged continuous
     batching); ``active`` (B,) 0/1 gates per-slot work (default pos >= 0).
     ``num_splits > 1`` selects the two-phase split-K path for long contexts.
+    T > 1 is the speculative multi-token verify block (query row ``t``
+    attends keys <= pos + t); it always takes the single-pass kernel —
+    the split-K variant is single-token only.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     qt = q.swapaxes(1, 2)
     kt = k_cache.swapaxes(1, 2)
     vt = v_cache.swapaxes(1, 2)
-    if num_splits > 1:
+    if num_splits > 1 and q.shape[1] == 1:
         out = decode_attention_splitk_tpu(qt, kt, vt, pos, active=active,
                                           window=window, block_k=block_k,
                                           num_splits=num_splits,
@@ -67,8 +70,8 @@ def decode_attention(q, k_cache, v_cache, pos, *, active=None, window=0,
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, page_idx, pos, *, active=None,
                            window=0, interpret=None):
-    """Model layout: q (B,1,H,D); pools (P, page_size, KV, D); page_idx
-    (B, max_pages) int32 -> (B,1,H,D).
+    """Model layout: q (B,T,H,D); pools (P, page_size, KV, D); page_idx
+    (B, max_pages) int32 -> (B,T,H,D).
 
     Paged mirror of ``decode_attention``: the KV stream is gathered
     through the page table by the kernel's scalar-prefetched index_map.

@@ -36,7 +36,7 @@ from .decode_attention import NEG_INF, _block_needed, _normalize_pos
 
 def _paged_decode_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref, v_ref,
                          o_ref, m_ref, l_ref, acc_ref, *, window: int,
-                         page_size: int, scale: float):
+                         page_size: int, scale: float, tq: int):
     ib = pl.program_id(0)
     ip = pl.program_id(2)
     n_pages = pl.num_programs(2)
@@ -51,22 +51,25 @@ def _paged_decode_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref, v_ref,
 
     k_start = ip * page_size  # logical position of this page's first key
 
-    @pl.when(_block_needed(pos, active, k_start, page_size, window))
+    @pl.when(_block_needed(pos, active, k_start, page_size, window, tq))
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)  # (1, D)
+        q = q_ref[0, 0].astype(jnp.float32)  # (tq, D)
         k = k_ref[0, 0].astype(jnp.float32)  # (page_size, D)
         v = v_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_size),
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tq, page_size),
                                                   1)
-        mask = kpos <= pos
+        qpos = pos + jax.lax.broadcasted_iota(jnp.int32, (tq, page_size), 0)
+        mask = kpos <= qpos
         if window:
-            mask &= pos - kpos < window
+            mask &= qpos - kpos < window
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
+        # mask-gated exp — see _decode_kernel: draft rows fully masked in
+        # a needed page must contribute exactly zero
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
         pv = jax.lax.dot_general(p.astype(v.dtype), v,
@@ -83,13 +86,16 @@ def _paged_decode_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref, v_ref,
 
 def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
                                active=None, window=0, interpret=False):
-    """q (B, H, 1, D); pools (P, KV, page_size, D); page_idx (B, max_pages)
-    int32; pos scalar or (B,) int32.  Returns (B, H, 1, D).
+    """q (B, H, T, D); pools (P, KV, page_size, D); page_idx (B, max_pages)
+    int32; pos scalar or (B,) int32.  Returns (B, H, T, D).
 
     ``max_pages * page_size`` is the logical max_len.  Unmapped page-table
     entries must be 0 (the null page); ``active`` defaults to ``pos >= 0``.
+    T > 1 is the speculative multi-token verify block: query row ``t``
+    attends logical keys ``kpos <= pos[b] + t`` — the page indirection
+    never changes the mask math.
     """
-    b, h, _, d = q.shape
+    b, h, tq, d = q.shape
     n_pool, kv, page_size, _ = k_pages.shape
     max_pages = page_idx.shape[1]
     assert page_idx.shape[0] == b, (page_idx.shape, b)
@@ -104,12 +110,12 @@ def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
             jnp.asarray(active, jnp.int32).reshape(-1), (b,))
 
     kernel = functools.partial(_paged_decode_kernel, window=window,
-                               page_size=page_size, scale=scale)
+                               page_size=page_size, scale=scale, tq=tq)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # page_idx, pos, active
         grid=(b, h, max_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, d),
+            pl.BlockSpec((1, 1, tq, d),
                          lambda b_, h_, ip, pt_, pos_, act_: (b_, h_, 0, 0)),
             # the paged gather: DMA physical page pt_[b, ip] of the pool
             pl.BlockSpec((1, 1, page_size, d),
@@ -119,17 +125,17 @@ def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
                          lambda b_, h_, ip, pt_, pos_, act_:
                          (pt_[b_, ip], h_ // g, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, d),
+        out_specs=pl.BlockSpec((1, 1, tq, d),
                                lambda b_, h_, ip, pt_, pos_, act_:
                                (b_, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, d), jnp.float32),
         ],
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq, d), q.dtype),
         interpret=interpret,
     )(page_idx, pos, active, q, k_pages, v_pages)

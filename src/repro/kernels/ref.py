@@ -31,24 +31,30 @@ def attention_ref(q, k, v, *, causal=True, window=0):
 
 
 def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0):
-    """q (B,H,1,D); caches (B,KV,S,D) -> (B,H,1,D).
+    """q (B,H,T,D); caches (B,KV,S,D) -> (B,H,T,D).
 
     Ragged: ``pos`` may be a scalar (all slots at one position) or a (B,)
     vector of per-slot positions; slots with pos < 0 are inactive and
     return zeros (the serving engine parks free slots at -1).
+
+    Multi-token (speculative verify): query row ``t`` of slot ``b`` sits
+    at absolute position ``pos[b] + t`` and attends keys
+    ``kpos <= pos[b] + t`` — causal *within* the draft block as well as
+    against the prefix.  T = 1 reduces to the classic one-token decode.
     """
-    b, h, _, d = q.shape
+    b, h, t, d = q.shape
     kv, s = k_cache.shape[1], k_cache.shape[2]
     g = h // kv
     kx = jnp.repeat(k_cache, g, axis=1).astype(jnp.float32)
     vx = jnp.repeat(v_cache, g, axis=1).astype(jnp.float32)
     sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * d ** -0.5
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    qpos = pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
     kpos = jnp.arange(s)
-    mask = kpos[None, :] <= pos[:, None]  # (B, S)
+    mask = kpos[None, None, :] <= qpos[:, :, None]  # (B, T, S)
     if window:
-        mask &= pos[:, None] - kpos[None, :] < window
-    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+        mask &= qpos[:, :, None] - kpos[None, None, :] < window
+    sc = jnp.where(mask[:, None, :, :], sc, -1e30)
     p = jnp.exp(sc - sc.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vx)
@@ -60,11 +66,12 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_idx, pos, *,
                                window=0):
     """Oracle for the paged flash-decode kernel.
 
-    q (B,H,1,D); pools (P,KV,page_size,D); page_idx (B,max_pages) int32
-    (0 = null page for unmapped blocks) -> (B,H,1,D).  Gathers each slot's
+    q (B,H,T,D); pools (P,KV,page_size,D); page_idx (B,max_pages) int32
+    (0 = null page for unmapped blocks) -> (B,H,T,D).  Gathers each slot's
     pages into a dense (B,KV,S,D) view (S = max_pages * page_size) and
-    defers to ``decode_attention_ref`` — logical masking is untouched by
-    the physical indirection.
+    defers to ``decode_attention_ref`` — logical masking (including the
+    multi-token intra-draft causal mask) is untouched by the physical
+    indirection.
     """
     b = q.shape[0]
     _, kv, page_size, d = k_pages.shape

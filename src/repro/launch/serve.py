@@ -22,6 +22,10 @@ can touch and queues with backpressure when the pool is exhausted.
 ``--victim-policy youngest-first|lowest-weight-share-first``), and
 ``--tenant-weights "tenant-0=3,tenant-1=1"`` maps SLO tiers onto
 weighted-DRF shares.
+
+``--speculate`` enables speculative multi-token decode (``--draft-k N``
+tokens per slot per tick, ``--drafter`` from ``runtime.draft.DRAFTERS``);
+the run reports the draft acceptance rate alongside throughput.
 """
 from __future__ import annotations
 
@@ -34,6 +38,7 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import LM, RuntimeKnobs
+from repro.runtime.draft import DRAFTERS
 from repro.runtime.scheduler import ADMISSION_POLICIES, VICTIM_POLICIES
 from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
                                  ServeEngine)
@@ -90,6 +95,11 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=None,
                     help="per-request sampling seed (default: request id)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative multi-token decode (see --draft-k)")
+    ap.add_argument("--draft-k", type=int, default=3,
+                    help="draft tokens per slot per tick (with --speculate)")
+    ap.add_argument("--drafter", choices=sorted(DRAFTERS), default="ngram")
     ap.add_argument("--cache", choices=("dense", "paged"), default="dense")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None,
@@ -98,6 +108,8 @@ def main():
                     default="pack")
     ap.add_argument("--no-prefix-cache", action="store_true")
     args = ap.parse_args()
+    if args.speculate and args.draft_k <= 0:
+        ap.error(f"--speculate needs --draft-k >= 1 (got {args.draft_k})")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
@@ -109,7 +121,9 @@ def main():
         page_policy=args.page_policy,
         prefix_cache=not args.no_prefix_cache, policy=args.policy,
         tenant_weights=args.tenant_weights, preempt=args.preempt,
-        victim_policy=args.victim_policy))
+        victim_policy=args.victim_policy,
+        draft_k=args.draft_k if args.speculate else 0,
+        drafter=args.drafter))
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed)
@@ -135,6 +149,12 @@ def main():
         print(f"preemptions: {engine.scheduler.preempted_total} "
               f"(requests preempted >=1x: "
               f"{sum(1 for r in done if r.preempt_count)})")
+    if args.speculate:
+        st = engine.spec_stats()
+        print(f"speculative: draft_k={st['draft_k']} "
+              f"acceptance {st['acceptance_rate']:.2f} "
+              f"({st['accepted']}/{st['proposed']}), "
+              f"{st['tokens_per_tick']:.2f} tok/tick")
     if ttft:
         print(f"ttft p50 {np.percentile(ttft, 50) * 1e3:.0f}ms / "
               f"p99 {np.percentile(ttft, 99) * 1e3:.0f}ms "

@@ -151,41 +151,48 @@ def _flash_causal_recursive(q, k, v, *, q_chunk, q_offset, depth=4):
 
 
 def decode_attention_xla(q, k_cache, v_cache, pos, *, window=0):
-    """One-token decode.  q (B,1,H,D); caches (B,S,KV,D).
+    """Decode-time attention.  q (B,T,H,D); caches (B,S,KV,D).
 
     Reads the whole cache (O(S)); positions beyond ``pos`` and outside the
     window are masked.  Ragged: ``pos`` may be a scalar (lockstep) or a
     (B,) vector of per-slot prefix lengths — the XLA mirror of the Pallas
     per-slot kernel contract.  Slots with pos < 0 are inactive and return
     zeros.
+
+    T > 1 is the speculative multi-token verify block: query row ``t``
+    of slot ``b`` sits at absolute position ``pos[b] + t`` and attends
+    keys ``kpos <= pos[b] + t`` — causal against the prefix AND within
+    the draft (row t sees draft rows 0..t, freshly written to the cache
+    before this call).  T = 1 is the classic one-token decode step.
     """
-    b, _, h, d = q.shape
+    b, t, h, d = q.shape
     s, kv = k_cache.shape[1], k_cache.shape[2]
     g = h // kv
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
-    qg = q.reshape(b, 1, kv, g, d)
-    scores = _grouped_scores(qg, k_cache)  # (B,KV,G,1,S)
+    qpos = pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
+    qg = q.reshape(b, t, kv, g, d)
+    scores = _grouped_scores(qg, k_cache)  # (B,KV,G,T,S)
     kpos = jnp.arange(s)
-    mask = kpos[None, :] <= pos[:, None]  # (B, S)
+    mask = kpos[None, None, :] <= qpos[:, :, None]  # (B, T, S)
     if window:
-        mask &= pos[:, None] - kpos[None, :] < window
-    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+        mask &= qpos[:, :, None] - kpos[None, None, :] < window
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = _grouped_context(probs, v_cache)  # (B,1,KV,G,D)
+    out = _grouped_context(probs, v_cache)  # (B,T,KV,G,D)
     out = jnp.where((pos >= 0)[:, None, None, None, None], out, 0.0)
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    return out.reshape(b, t, h, d).astype(q.dtype)
 
 
 def paged_decode_attention_xla(q, k_pages, v_pages, page_idx, pos, *,
                                window=0):
-    """Paged one-token decode, XLA reference path.
+    """Paged decode attention, XLA reference path.
 
-    q (B,1,H,D); pools (P, page_size, KV, D); page_idx (B, max_pages)
+    q (B,T,H,D); pools (P, page_size, KV, D); page_idx (B, max_pages)
     int32 (0 = null page for unmapped blocks).  Gathers each slot's pages
     into a dense (B, S, KV, D) view and defers to
-    ``decode_attention_xla`` — the Pallas kernel resolves the same
-    indirection inside its scalar-prefetched index_map instead of
-    materializing the gather.
+    ``decode_attention_xla`` (T > 1 = the speculative verify block) — the
+    Pallas kernel resolves the same indirection inside its
+    scalar-prefetched index_map instead of materializing the gather.
     """
     b = q.shape[0]
     _, page_size, kv, d = k_pages.shape
@@ -255,6 +262,39 @@ def gather_slot_pages(k_pages, v_pages, page_idx, slot):
     return k, v
 
 
+def paged_cache_update_multi(k_pages, v_pages, k_new, v_new, pos, page_idx,
+                             page_size):
+    """Insert a (B,T,KV,D) draft block at logical positions ``pos[b] + t``
+    through the page table — the multi-token (speculative verify)
+    ``paged_cache_update``.
+
+    Page-aware write contract: token ``t`` of slot ``b`` lands in page
+    ``page_idx[b, (pos[b]+t) // page_size]``.  Inactive slots (pos < 0)
+    and positions past the table's logical span write the null page
+    (entry 0), so draft padding beyond a slot's reservation can never
+    clobber live data or touch an unheld page — rollback of rejected
+    tokens is pure position truncation, no page ever changes hands.
+
+    One scatter per pool (indices (B, T)) rather than T single-token
+    scatters: XLA CPU pays ~100us per scatter op, which at draft depths
+    of 4+ would eat the ticks speculation saves.
+    """
+    b, t = k_new.shape[0], k_new.shape[1]
+    idx = jnp.asarray(page_idx, jnp.int32)
+    max_len = idx.shape[1] * page_size
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    pos_t = pos[:, None] + jnp.arange(t)[None, :]  # (B, T) logical
+    valid = (pos[:, None] >= 0) & (pos_t < max_len)
+    posc = jnp.clip(pos_t, 0, max_len - 1)
+    blk = posc // page_size
+    off = posc % page_size
+    page = jnp.take_along_axis(idx, blk, axis=1)  # (B, T) physical
+    page = jnp.where(valid, page, 0)  # null page for don't-care rows
+    k_pages = k_pages.at[page, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[page, off].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
 def cache_update(k_cache, v_cache, k_new, v_new, pos):
     """Insert (B,1,KV,D) at position ``pos`` of (B,S,KV,D) caches.
 
@@ -275,3 +315,28 @@ def cache_update(k_cache, v_cache, k_new, v_new, pos):
     upd = jax.vmap(
         lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
     return upd(k_cache, k_new, pos), upd(v_cache, v_new, pos)
+
+
+def cache_update_multi(k_cache, v_cache, k_new, v_new, pos):
+    """Insert a (B,T,KV,D) draft block at positions ``pos[b] + t`` of
+    (B,S,KV,D) caches — the multi-token ``cache_update``.
+
+    One scatter per cache with explicit (B, T) row indices rather than a
+    length-T ``dynamic_update_slice`` block (which clamps the block so it
+    *fits*, silently shifting a draft straddling the cache end onto
+    earlier live positions) or T single-token scatters (XLA CPU pays
+    ~100us per scatter op).  Each overflowing position clamps to S-1
+    individually — the engine never lets an *accepted* token land there,
+    so the clamped writes are draft padding whose garbage is never
+    attended (rollback = position truncation); inactive slots (pos < 0)
+    clamp to the don't-care low positions exactly like the single-token
+    path.
+    """
+    t = k_new.shape[1]
+    b, s = k_cache.shape[0], k_cache.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    rows = jnp.clip(pos[:, None] + jnp.arange(t)[None, :], 0, s - 1)
+    bidx = jnp.arange(b)[:, None]
+    k_cache = k_cache.at[bidx, rows].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, rows].set(v_new.astype(v_cache.dtype))
+    return k_cache, v_cache

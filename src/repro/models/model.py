@@ -16,7 +16,8 @@ from .transformer import (apply_blocks, apply_blocks_decode,
                           apply_blocks_prefill_chunk, cache_batch_axes,
                           copy_cache_in, copy_cache_out, copy_cache_pages,
                           init_blocks, init_cache, init_cache_paged,
-                          supports_chunked_prefill, supports_paged_cache)
+                          supports_chunked_prefill, supports_paged_cache,
+                          supports_speculative)
 
 MOE_LB_COEF = 0.01
 MOE_Z_COEF = 1e-3
@@ -149,6 +150,46 @@ class LM:
 
     def supports_chunked_prefill(self) -> bool:
         return supports_chunked_prefill(self.cfg)
+
+    # -------------------------------------------- speculative (multi-token)
+    def supports_speculative(self) -> bool:
+        return supports_speculative(self.cfg)
+
+    def decode_step_spec(self, params, caches, tokens, pos):
+        """Multi-token verify step.  tokens (B,T) int32 — the current
+        feed token plus up to T-1 drafted continuations at absolute
+        positions ``pos[b] .. pos[b] + T-1`` — -> (logits (B,T,V) fp32,
+        new caches).
+
+        All T K/V pairs are written to the cache before attention runs,
+        and the mask is causal within the draft block, so logits row
+        ``t`` is the target model's next-token distribution *given* the
+        draft prefix tokens[:, :t+1] — exactly what sequential decode
+        would have produced at that position.  Rejected drafts roll back
+        by position truncation: the engine simply resumes at the last
+        accepted position and later writes overwrite the stale K/V,
+        which the position mask keeps unattended until then.
+        """
+        x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
+        x, new_caches = apply_blocks_decode(params["blocks"], x, caches, pos,
+                                            cfg=self.cfg, knobs=self.knobs)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)
+        return logits.astype(jnp.float32), new_caches
+
+    def decode_step_spec_paged(self, params, caches, tokens, pos, page_idx,
+                               *, page_size: int):
+        """Paged ``decode_step_spec``: draft K/V land in the physical
+        pages the slot's page-table row maps (positions past the mapped
+        span write the null page — see
+        ``attention.paged_cache_update_multi``)."""
+        x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
+        x, new_caches = apply_blocks_decode(params["blocks"], x, caches, pos,
+                                            cfg=self.cfg, knobs=self.knobs,
+                                            paged=(page_idx, page_size))
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)
+        return logits.astype(jnp.float32), new_caches
 
     # -------------------------------------------------------- paged cache
     def supports_paged_cache(self) -> bool:

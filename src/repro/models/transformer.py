@@ -187,17 +187,25 @@ def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
                              shard_fn, paged=None):
     """``paged = (page_idx, page_size)`` switches the cache from a dense
     per-slot stripe to a shared page pool addressed through the slot's
-    page-table row; attention masking is identical either way."""
-    b = x.shape[0]
+    page-table row; attention masking is identical either way.
+
+    x may carry T > 1 tokens per slot (the speculative verify block):
+    token ``t`` sits at absolute position ``pos[b] + t``, all T K/V pairs
+    are written to the cache first, and the attention mask is causal
+    within the block as well as against the prefix."""
+    b, t = x.shape[0], x.shape[1]
     h = rmsnorm(p["ln1"], x)
     pos = jnp.asarray(pos, jnp.int32)  # scalar (lockstep) or (B,) (ragged)
-    positions = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim
-                                 else pos, (b, 1))
+    positions = jnp.broadcast_to(
+        (pos.reshape(-1, 1) if pos.ndim else pos) + jnp.arange(t)[None, :]
+        if t > 1 else (pos.reshape(-1, 1) if pos.ndim else pos), (b, t))
     q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
     if paged is not None:
         page_idx, page_size = paged
-        kc, vc = attn.paged_cache_update(cache["k"], cache["v"], k_new,
-                                         v_new, pos, page_idx, page_size)
+        upd = attn.paged_cache_update_multi if t > 1 \
+            else attn.paged_cache_update
+        kc, vc = upd(cache["k"], cache["v"], k_new, v_new, pos, page_idx,
+                     page_size)
         if knobs.use_pallas:
             from repro.kernels import paged_decode_attention as _pallas_paged
 
@@ -206,7 +214,8 @@ def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
             ctx = attn.paged_decode_attention_xla(q, kc, vc, page_idx, pos,
                                                   window=window)
     else:
-        kc, vc = attn.cache_update(cache["k"], cache["v"], k_new, v_new, pos)
+        upd = attn.cache_update_multi if t > 1 else attn.cache_update
+        kc, vc = upd(cache["k"], cache["v"], k_new, v_new, pos)
         if knobs.use_pallas:
             from repro.kernels import decode_attention as _pallas_decode
 
@@ -399,6 +408,11 @@ def apply_blocks_decode(blocks, x, caches, pos, *, cfg, knobs, paged=None):
     if paged is not None and plan.inner_kind != "attn":
         raise NotImplementedError(
             f"paged KV cache unsupported for family={cfg.family!r}")
+    if x.shape[1] > 1 and plan.inner_kind != "attn":
+        raise NotImplementedError(
+            f"multi-token (speculative) decode unsupported for "
+            f"family={cfg.family!r} — SSM state advances one token at a "
+            f"time")
 
     def inner_fn(p, xx, cache, window):
         if plan.inner_kind == "attn":
@@ -429,6 +443,13 @@ def supports_chunked_prefill(cfg) -> bool:
 def supports_paged_cache(cfg) -> bool:
     """Paged KV needs every cached layer to BE a KV cache; SSM/hybrid
     recurrent state is per-slot and position-free, so it cannot be paged."""
+    return build_plan(cfg).inner_kind == "attn"
+
+
+def supports_speculative(cfg) -> bool:
+    """Speculative (multi-token) decode scores a whole draft block in one
+    forward pass, which needs position-indexed caches only; SSM/hybrid
+    recurrent state advances strictly one token at a time."""
     return build_plan(cfg).inner_kind == "attn"
 
 

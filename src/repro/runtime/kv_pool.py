@@ -430,6 +430,17 @@ class KVCacheManager:
         return AdmitResult(start=start, matched=matched, cow=cow,
                            blocks=blocks)
 
+    def slot_span(self, slot: int) -> int:
+        """Writable logical positions of ``slot``'s mapped page chain
+        (``held pages * page_size``).  The speculative engine caps each
+        tick's draft depth by this: admission reserved exactly
+        ``ceil((prompt + max_new) / page_size)`` pages, and a draft
+        never extends past the token budget, so in-flight drafts always
+        fit the reservation — this is the belt-and-braces bound that
+        keeps an off-by-one from ever writing through an unheld
+        page-table entry."""
+        return len(self._held[slot]) * self.page_size
+
     def register_prefix(self, slot: int, prompt: np.ndarray):
         """After prefill: publish the slot's full prompt pages for reuse."""
         if self.prefix is not None:

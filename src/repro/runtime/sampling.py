@@ -139,3 +139,54 @@ def sample_tokens(logits, pos, temp, top_k, top_p, keys):
 
     sampled = jax.vmap(draw)(keys, pos, masked).astype(jnp.int32)
     return jnp.where(temp > 0, sampled, greedy)
+
+
+def sample_tokens_multi(logits, pos, temp, top_k, top_p, keys):
+    """Per-row target draws for a speculative verify block, static shapes.
+
+    logits (B, T, V) fp32 — row ``t`` of slot ``b`` is the target
+    model's distribution at absolute position ``pos[b] + t`` (given the
+    draft prefix); pos (B,) int32; temp/top_k/top_p (B,) and keys (B, 2)
+    are the *per-slot* arrays, shared by every row of a slot.  Returns
+    (B, T) int32.
+
+    Each row folds its own absolute position into the slot's key —
+    exactly the fold the non-speculative step would have used when it
+    reached that position — so an accepted draw is **bitwise the token
+    the baseline engine would have sampled there** (and rows with
+    ``temp <= 0`` are the bitwise-greedy argmax).  That makes the
+    accept-on-equality rule of ``speculative_accept`` an exact rejection
+    sampler: every emitted token is a faithful draw from the target
+    distribution conditioned on the (verified) prefix.
+    """
+    b, t, v = logits.shape
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    pos_rows = (pos[:, None] + jnp.arange(t)[None, :]).reshape(-1)
+    rep = lambda x: jnp.repeat(x, t, axis=0)
+    out = sample_tokens(logits.reshape(b * t, v), pos_rows, rep(temp),
+                        rep(top_k), rep(top_p), rep(keys))
+    return out.reshape(b, t)
+
+
+def speculative_accept(draft, target) -> int:
+    """Host-side acceptance rule: the number of draft tokens confirmed by
+    the verify pass.
+
+    ``draft`` is the k <= T-1 proposed tokens; ``target`` is the (T,)
+    verify-step output where ``target[t]`` is the token the target model
+    emits *after* feed + draft[:t].  Draft token ``t`` survives iff every
+    earlier draft survived and ``draft[t] == target[t]`` — the emitted
+    tokens are then ``target[:m + 1]`` (the m accepted drafts, which
+    equal the target's own choices, plus the free correction/bonus
+    token), so the output stream is exactly what non-speculative decode
+    would have produced token by token.  Greedy verify makes this
+    deterministic lockstep; sampled verify compares against the
+    position-keyed target draw, which preserves the target distribution
+    exactly (see ``sample_tokens_multi``).
+    """
+    m = 0
+    for d, t in zip(draft, target):
+        if int(d) != int(t):
+            break
+        m += 1
+    return m

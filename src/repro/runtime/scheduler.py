@@ -320,7 +320,14 @@ class Scheduler:
     def demand(self, req) -> ServeResource:
         """The DRF charge an admission of ``req`` carries.  Resuming a
         paged checkpoint re-takes only the slot — its page chain never
-        left the pool (and never stopped being charged)."""
+        left the pool (and never stopped being charged).
+
+        The KV charge covers in-flight speculative drafts too: the
+        engine caps a draft at the request's remaining token budget
+        (``ServeEngine._draft_cap``), so the deepest draft write stays
+        inside the ``prompt + max_new`` span this reservation already
+        accounts for — speculation changes *when* KV is written, never
+        how much is reserved."""
         if getattr(req, "_preempted", False) and self.kv is not None:
             return ServeResource(slots=1, kv=0)
         if self.kv is not None:

@@ -60,10 +60,30 @@ shares — ``{"gold": 3, "free": 1}`` converges to a 3:1 slot split under
 contention.
 
 ``mode="wave"`` keeps the legacy lockstep engine — admit a fresh wave only
-when every slot is free, all slots decode greedily at one scalar position
-— as the baseline ``benchmarks/serve_throughput.py`` measures continuous
-batching against (the serving analogue of the paper's exclusive,
-non-co-scheduled mode).  Wave mode rejects ``temperature > 0`` requests.
+when every slot is free, all slots decode at one scalar position — as the
+baseline ``benchmarks/serve_throughput.py`` measures continuous batching
+against (the serving analogue of the paper's exclusive, non-co-scheduled
+mode).  Sampled requests are served by drawing host-side from the wave
+logits through the same position-keyed ``sample_tokens``, so a seeded
+request decodes the identical trajectory in either mode.
+
+Speculative decode (``ServeConfig.draft_k``, continuous mode)
+-------------------------------------------------------------
+``draft_k > 0`` turns every decode tick into draft -> verify -> accept:
+a host-side drafter (``runtime/draft.py``, default model-free n-gram
+lookup over the slot's own history) proposes up to ``draft_k``
+continuation tokens per slot, ONE compiled multi-token step scores the
+feed token plus all drafts at per-slot positions (causal within the
+draft), and the engine emits the longest verified prefix plus the free
+correction token — one token minimum, ``draft_k + 1`` maximum per tick.
+Greedy output is bitwise-identical to plain decode; sampled output is
+bitwise-identical to the same seed's non-speculative trajectory (each
+row folds its absolute position into the slot's key).  Rejected drafts
+roll back by pure position truncation — dense: stale K/V beyond ``pos``
+is never attended and is overwritten when reached; paged: draft writes
+land only in the slot's already-reserved pages (padding past the span
+hits the null page), so no page is ever allocated, freed, or leaked by
+speculation and preemption checkpoints compose unchanged.
 
 Paged KV cache (``cache="paged"``, continuous mode only)
 --------------------------------------------------------
@@ -94,8 +114,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.draft import get_drafter
 from repro.runtime.kv_pool import KVCacheManager
-from repro.runtime.sampling import SamplingParams, matches_stop
+from repro.runtime.sampling import (SamplingParams, matches_stop,
+                                    sample_tokens, speculative_accept)
 from repro.runtime.scheduler import Scheduler
 from repro.runtime.steps import (compiled_fn, compiled_step,
                                  pick_decode_splits)
@@ -256,7 +278,14 @@ class ServeConfig:
     tiers; unlisted tenants weigh 1).  ``preempt=True`` lets the decide
     phase reclaim running slots when a swap strictly improves weighted
     fairness; ``victim_policy`` (``runtime.scheduler.VICTIM_POLICIES``)
-    picks who gets checkpointed."""
+    picks who gets checkpointed.
+
+    ``draft_k > 0`` enables speculative decode (continuous mode,
+    attention-only plans): every decode tick scores up to ``draft_k``
+    drafted tokens per slot in one multi-token verify step and emits the
+    accepted prefix plus the free correction token — bitwise-identical
+    output, fewer ticks.  ``drafter`` names a ``runtime.draft.DRAFTERS``
+    entry (default: model-free prompt/n-gram lookup)."""
 
     batch_slots: int = 4
     max_len: int = 128
@@ -272,6 +301,8 @@ class ServeConfig:
     tenant_weights: Optional[dict] = None
     preempt: bool = False
     victim_policy: str = "youngest-first"
+    draft_k: int = 0
+    drafter: str = "ngram"
 
 
 _CONFIG_FIELDS = {f.name for f in dataclasses.fields(ServeConfig)}
@@ -303,6 +334,20 @@ class ServeEngine:
         if config.preempt and config.mode != "continuous":
             raise ValueError("preempt=True requires mode='continuous' "
                              "(wave slots drain in lockstep)")
+        if config.draft_k < 0:
+            raise ValueError(f"draft_k must be >= 0: {config.draft_k}")
+        if config.draft_k:
+            if config.mode != "continuous":
+                raise ValueError("speculative decode (draft_k > 0) requires "
+                                 "mode='continuous'")
+            if not model.supports_speculative():
+                raise ValueError(
+                    f"speculative decode unsupported for "
+                    f"family={model.cfg.family!r} (SSM state advances one "
+                    f"token at a time)")
+            if config.draft_k + 1 >= config.max_len:
+                raise ValueError(f"draft_k {config.draft_k} too deep for "
+                                 f"max_len {config.max_len}")
         self.config = config
         self.model = model
         self.params = params
@@ -390,6 +435,25 @@ class ServeEngine:
                 self._prefill = compiled_step(model, "prefill_chunk")
                 self._prefill_sampled = compiled_step(model, "prefill_chunk",
                                                       sampled=True)
+        # speculative decode: one verify step of static width T = k + 1
+        # per (cache layout, sampled) variant; the drafter is pure host
+        self.draft_k = config.draft_k
+        if self.draft_k:
+            self.drafter = get_drafter(config.drafter)
+            spec_kind = ("paged_spec_serve" if config.cache == "paged"
+                         else "spec_serve")
+            spec_ps = config.page_size if config.cache == "paged" else 0
+            self._spec_step = compiled_step(
+                model, spec_kind, page_size=spec_ps, draft_len=self.draft_k)
+            self._spec_step_sampled = compiled_step(
+                model, spec_kind, page_size=spec_ps, draft_len=self.draft_k,
+                sampled=True)
+            # acceptance telemetry: proposed/accepted draft tokens and
+            # how many tokens each spec tick emitted
+            self.spec_proposed = 0
+            self.spec_accepted = 0
+            self.spec_emitted = 0
+            self.spec_ticks = 0
         if cache_shardings is not None:
             self.caches = jax.device_put(self.caches, cache_shardings)
         # decide/execute split: the scheduler owns the queue, the policy,
@@ -438,10 +502,6 @@ class ServeEngine:
             raise ValueError(
                 f"prompt length {len(req.prompt)} outside [1, "
                 f"{self.max_len - 1}] for max_len={self.max_len}")
-        if self.mode == "wave" and req.sampling.temperature > 0:
-            raise ValueError(
-                "sampled decode (temperature > 0) requires "
-                "mode='continuous'; wave mode is the greedy baseline")
         if self.kv is not None and not self.kv.fits_ever(
                 len(req.prompt), req.max_new_tokens):
             raise ValueError(
@@ -661,6 +721,11 @@ class ServeEngine:
         for adm in self.scheduler.decide(self.active).admissions:
             s, req = adm.slot, adm.req
             self.active[s] = req
+            sp = req.sampling
+            self.samp_temp[s] = sp.temperature
+            self.samp_topk[s] = sp.top_k
+            self.samp_topp[s] = sp.top_p
+            self.samp_keys[s] = sp.key_data(req.req_id)
             req.state = RequestState.PREFILL
             req._feed = deque(req.prompt.tolist())  # type: ignore
             self.tokens[s, 0] = req._feed.popleft()
@@ -689,6 +754,16 @@ class ServeEngine:
         live = sum(r is not None for r in self.active)
         if not live:
             return emitted
+        if self.draft_k:
+            return self._decode_tick_spec(emitted, live)
+        return self._decode_tick_plain(emitted, live)
+
+    def _decode_tick_plain(self, emitted: int, live: int) -> int:
+        """One single-token decode step for every live slot (the
+        baseline tick; also what a speculative engine dispatches on
+        ticks where no slot proposed a draft — the T-wide verify step
+        would pay ~T x attention/unembed work to emit the same one
+        token per slot)."""
         pos = jnp.asarray(self.pos)
         # pay the sampling math only when a live slot actually samples
         # (finished slots reset their temp to 0)
@@ -728,6 +803,129 @@ class ServeEngine:
             self._maybe_stop(s)
         return emitted
 
+    # ------------------------------------------------------- speculative
+    def _draft_cap(self, s: int, req: Request) -> int:
+        """Deepest draft slot ``s`` may carry this tick.
+
+        Bounded by (a) the configured ``draft_k``; (b) the request's
+        remaining token budget minus one (the verify tick always emits
+        at least the correction token, so cap + 1 never overshoots
+        ``max_new_tokens``); (c) the ``max_len`` window (after accepting
+        everything, ``pos`` stays <= max_len - 1 — the same boundary the
+        baseline length-stop enforces); and (d), paged only, the slot's
+        mapped page span — admission reserved pages for the full token
+        budget, so (b) already implies (d), but the explicit bound means
+        an off-by-one can reject a draft, never write an unheld page.
+        Draft padding beyond the cap still flows through the compiled
+        step; its writes land clamped / in the null page and its rows
+        are never read (rollback = position truncation).
+        """
+        cap = min(self.draft_k,
+                  req.max_new_tokens - len(req.output) - 1,
+                  self.max_len - 2 - int(self.pos[s]))
+        if self.kv is not None:
+            cap = min(cap, self.kv.slot_span(s) - 1 - int(self.pos[s]))
+        return max(cap, 0)
+
+    def _decode_tick_spec(self, emitted: int, live: int) -> int:
+        """One speculative decode tick: draft per slot (host), verify all
+        drafts in one compiled multi-token step (device), accept the
+        longest confirmed prefix plus the free correction token (host).
+
+        The emission loop replays the baseline tick ordering per token —
+        advance ``pos``, emit, stop-check — so eos/stop/length fire at
+        exactly the token they would have in sequential decode and any
+        accepted-but-past-stop tokens are discarded, keeping the output
+        stream bitwise-identical to the non-speculative engine.
+
+        Ticks where no slot proposes a draft (incompressible output, or
+        every slot at cap 0 near its budget) fall back to the plain
+        single-token step — already compiled, and bitwise the same as a
+        draft-less verify — instead of paying the T-wide verify work to
+        emit one token per slot; ``spec_ticks`` therefore counts only
+        the multi-token verify dispatches.
+        """
+        t_width = self.draft_k + 1
+        feed = np.zeros((self.slots, t_width), np.int32)
+        feed[:, 0] = self.tokens[:, 0]
+        draft_len = np.zeros(self.slots, np.int32)
+        for s, req in enumerate(self.active):
+            if req is None or getattr(req, "_feed", None):
+                continue  # parked / token-feeding slots carry no draft
+            cap = self._draft_cap(s, req)
+            if cap <= 0:
+                continue
+            # hand the drafter only its lookback window: per-tick host
+            # work stays O(lookback), not O(tokens generated so far)
+            lb = getattr(self.drafter, "lookback", 0)
+            out = req.output
+            if lb and len(out) >= lb:
+                ctx = np.asarray(out[-lb:], np.int32)
+            else:
+                head = (req.prompt[max(len(req.prompt) + len(out) - lb, 0):]
+                        if lb else req.prompt)
+                ctx = np.concatenate([np.asarray(head, np.int32),
+                                      np.asarray(out, np.int32)])
+            d = self.drafter.propose(ctx, cap)
+            if len(d):
+                feed[s, 1:1 + len(d)] = d
+                draft_len[s] = len(d)
+        if not draft_len.any():
+            return self._decode_tick_plain(emitted, live)
+        pos = jnp.asarray(self.pos)
+        sampling = bool(self.samp_temp.max() > 0)
+        samp = (() if not sampling else
+                (jnp.asarray(self.samp_temp), jnp.asarray(self.samp_topk),
+                 jnp.asarray(self.samp_topp), jnp.asarray(self.samp_keys)))
+        step = self._spec_step_sampled if sampling else self._spec_step
+        extra = (() if self.kv is None
+                 else (jnp.asarray(self.kv.page_table),))
+        target_dev, self.caches = step(self.params, self.caches,
+                                       jnp.asarray(feed), pos, *extra, *samp)
+        target = np.asarray(target_dev)  # (B, T) per-row verified tokens
+        self.spec_ticks += 1
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            fq = getattr(req, "_feed")
+            if fq:  # still consuming the prompt (token-feed path)
+                self.pos[s] += 1
+                self.tokens[s, 0] = fq.popleft()
+                continue
+            if req.state is RequestState.PREFILL:  # token-feed path done
+                req.state = RequestState.DECODE
+            k_s = int(draft_len[s])
+            m = (speculative_accept(feed[s, 1:1 + k_s], target[s, :k_s])
+                 if k_s else 0)
+            self.spec_proposed += k_s
+            self.spec_accepted += m
+            for t in range(m + 1):
+                self.pos[s] += 1
+                tok = int(target[s, t])
+                self._emit(req, tok)
+                emitted += 1
+                self.spec_emitted += 1
+                self.tokens[s, 0] = tok
+                if self._maybe_stop(s):
+                    break  # accepted-but-past-stop tokens are discarded
+        return emitted
+
+    def spec_stats(self) -> dict:
+        """Speculative-decode telemetry: draft acceptance rate and the
+        average tokens emitted per verify tick (1.0 = plain decode)."""
+        if not self.draft_k:
+            return {"draft_k": 0}
+        return {
+            "draft_k": self.draft_k,
+            "drafter": self.config.drafter,
+            "proposed": self.spec_proposed,
+            "accepted": self.spec_accepted,
+            "acceptance_rate": (self.spec_accepted
+                                / max(self.spec_proposed, 1)),
+            "spec_ticks": self.spec_ticks,
+            "tokens_per_tick": self.spec_emitted / max(self.spec_ticks, 1),
+        }
+
     def _step_wave(self) -> int:
         self._admit_wave()
         if not any(r is not None for r in self.active):
@@ -736,7 +934,21 @@ class ServeEngine:
         logits, self.caches = self._decode_one(self.params, self.caches,
                                                jnp.asarray(self.tokens),
                                                jnp.int32(pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        if bool(self.samp_temp.max() > 0):
+            # sampled wave mode: host-side draw from the wave logits.
+            # Slots advance in lockstep from position 0, so each slot's
+            # absolute token position IS the wave position — the same
+            # (key, position) fold as the continuous sampled step, hence
+            # the same trajectory for a given seed; greedy (temp 0) rows
+            # stay the bitwise argmax inside sample_tokens.
+            sampler = compiled_fn(("wave_sample",), lambda: sample_tokens)
+            nxt = np.asarray(sampler(
+                logits, jnp.asarray(self.pos),
+                jnp.asarray(self.samp_temp), jnp.asarray(self.samp_topk),
+                jnp.asarray(self.samp_topp), jnp.asarray(self.samp_keys)),
+                dtype=np.int32)
+        else:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
         emitted = 0
         for s, req in enumerate(self.active):
             if req is None:

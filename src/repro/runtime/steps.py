@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
-from repro.runtime.sampling import sample_tokens
+from repro.runtime.sampling import sample_tokens, sample_tokens_multi
 
 
 def init_train_state(model, rng, moments_dtype=jnp.float32) -> dict:
@@ -149,6 +149,57 @@ def make_prefill_chunk_step(model, sampled: bool = False) -> Callable:
     return sampled_chunk_step if sampled else prefill_chunk_step
 
 
+# ------------------------------------------------------------- speculative
+def make_spec_serve_step(model, draft_len: int,
+                         sampled: bool = False) -> Callable:
+    """Speculative verify step: score the feed token plus up to
+    ``draft_len`` drafted continuations in ONE forward pass.
+
+    tokens (B, T = draft_len + 1) int32 at absolute positions
+    ``pos[b] .. pos[b] + T - 1``; returns (target (B, T) int32, new
+    caches) where ``target[b, t]`` is the token the target model emits
+    after feed + drafts[:t] — the greedy argmax, or (``sampled=True``)
+    the draw of ``sampling.sample_tokens_multi`` with each row's
+    absolute position folded into the slot's key.  The engine's host
+    side compares drafts against ``target`` (``speculative_accept``) and
+    rolls rejected positions back by truncation.
+    """
+    def spec_step(params, caches, tokens, pos):
+        logits, new_caches = model.decode_step_spec(params, caches, tokens,
+                                                    pos)
+        target = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return target, new_caches
+
+    def sampled_spec_step(params, caches, tokens, pos, temp, top_k, top_p,
+                          keys):
+        logits, new_caches = model.decode_step_spec(params, caches, tokens,
+                                                    pos)
+        target = sample_tokens_multi(logits, pos, temp, top_k, top_p, keys)
+        return target, new_caches
+
+    return sampled_spec_step if sampled else spec_step
+
+
+def make_paged_spec_serve_step(model, page_size: int, draft_len: int,
+                               sampled: bool = False) -> Callable:
+    """Paged mirror of ``make_spec_serve_step`` (adds the page-table
+    array; draft K/V land in the slot's mapped pages)."""
+    def spec_step(params, caches, tokens, pos, page_idx):
+        logits, new_caches = model.decode_step_spec_paged(
+            params, caches, tokens, pos, page_idx, page_size=page_size)
+        target = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return target, new_caches
+
+    def sampled_spec_step(params, caches, tokens, pos, page_idx, temp,
+                          top_k, top_p, keys):
+        logits, new_caches = model.decode_step_spec_paged(
+            params, caches, tokens, pos, page_idx, page_size=page_size)
+        target = sample_tokens_multi(logits, pos, temp, top_k, top_p, keys)
+        return target, new_caches
+
+    return sampled_spec_step if sampled else spec_step
+
+
 # ------------------------------------------------------------------- paged
 def make_paged_serve_step(model, page_size: int,
                           sampled: bool = False) -> Callable:
@@ -206,18 +257,23 @@ def make_paged_prefill_chunk_step(model, page_size: int,
 # pre-PR-4 per-engine dict meant each ServeEngine recompiled identical
 # steps — every benchmark mode/policy sweep and ci.sh smoke paid XLA
 # compilation again for the same (model config, step kind).  Keyed on
-# (cfg, knobs, kind, sampled, page_size): cfg and RuntimeKnobs are frozen
-# dataclasses, so two engines over equal configs share one jitted
-# callable (and with it jax's compilation cache).  Bounded LRU; falls
-# back to an uncached build if a config is unhashable (custom shard_fn
-# closures etc.).
+# (cfg, knobs, kind, sampled, page_size, draft_len): cfg and RuntimeKnobs
+# are frozen dataclasses, so two engines over equal configs share one
+# jitted callable (and with it jax's compilation cache).  Bounded LRU;
+# falls back to an uncached build if a config is unhashable (custom
+# shard_fn closures etc.).
 _STEP_KINDS = {
-    "serve": lambda m, ps, s: make_serve_step(m, sampled=s),
-    "prefill_chunk": lambda m, ps, s: make_prefill_chunk_step(m, sampled=s),
-    "paged_serve": lambda m, ps, s: make_paged_serve_step(m, ps, sampled=s),
+    "serve": lambda m, ps, s, dl: make_serve_step(m, sampled=s),
+    "prefill_chunk":
+        lambda m, ps, s, dl: make_prefill_chunk_step(m, sampled=s),
+    "paged_serve":
+        lambda m, ps, s, dl: make_paged_serve_step(m, ps, sampled=s),
     "paged_prefill_chunk":
-        lambda m, ps, s: make_paged_prefill_chunk_step(m, ps, sampled=s),
-    "decode_one": lambda m, ps, s: m.decode_step,
+        lambda m, ps, s, dl: make_paged_prefill_chunk_step(m, ps, sampled=s),
+    "spec_serve": lambda m, ps, s, dl: make_spec_serve_step(m, dl, sampled=s),
+    "paged_spec_serve":
+        lambda m, ps, s, dl: make_paged_spec_serve_step(m, ps, dl, sampled=s),
+    "decode_one": lambda m, ps, s, dl: m.decode_step,
 }
 _STEP_CACHE: OrderedDict = OrderedDict()
 _STEP_CACHE_MAX = 64
@@ -257,20 +313,23 @@ def compiled_fn(key, build: Callable, donate=()) -> Callable:
 
 
 def compiled_step(model, kind: str, *, sampled: bool = False,
-                  page_size: int = 0, decode_splits=None) -> Callable:
+                  page_size: int = 0, decode_splits=None,
+                  draft_len: int = 0) -> Callable:
     """Jitted serving step for ``model`` (donating the caches), memoized
     module-wide.  ``decode_splits`` overrides the knob for the split-K
-    variants (the autotuner's per-fanout steps share the cache too)."""
+    variants (the autotuner's per-fanout steps share the cache too);
+    ``draft_len`` sizes the speculative verify block (spec kinds only —
+    each draft depth is its own compiled step)."""
     knobs = (model.knobs if decode_splits is None
              else model.knobs.with_(decode_splits=decode_splits))
 
     def build():
         mdl = (model if knobs is model.knobs
                else type(model)(model.cfg, knobs))
-        return _STEP_KINDS[kind](mdl, page_size, sampled)
+        return _STEP_KINDS[kind](mdl, page_size, sampled, draft_len)
 
-    return compiled_fn((model.cfg, knobs, kind, sampled, page_size),
-                       build, donate=(1,))
+    return compiled_fn((model.cfg, knobs, kind, sampled, page_size,
+                        draft_len), build, donate=(1,))
 
 
 # -------------------------------------------------------- split-K autotune

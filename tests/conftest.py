@@ -6,3 +6,72 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+# --------------------------------------------------------------------------
+# Shared serving fixtures.  The engine/config construction helpers below
+# were copy-pasted across test_serving_api.py / test_preemption.py /
+# test_paged_kv.py (and now test_spec_decode.py); they live here once so
+# every suite shares ONE tiny model (params built once per session) and
+# the module-level compiled-step LRU actually deduplicates jit work
+# across test files.  They are plain functions (not only fixtures) so
+# hypothesis-driven tests can call them without function-scoped-fixture
+# health errors.
+# --------------------------------------------------------------------------
+_SHARED = {}
+
+
+def tiny_lm(arch="internlm2-1.8b", **overrides):
+    """(model, params) for the canonical serving test model: 2 layers,
+    64-token vocab, fp32 KV cache (bitwise-equality tests need exact
+    cache round trips).  Cached per (arch, overrides) for the session."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import LM, RuntimeKnobs
+
+    over = dict({"num_layers": 2, "vocab_size": 64}, **overrides)
+    key = (arch, tuple(sorted(over.items())))
+    if key not in _SHARED:
+        cfg = dataclasses.replace(get_config(arch, smoke=True), **over)
+        model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+        _SHARED[key] = (model, model.init(jax.random.PRNGKey(0)))
+    return _SHARED[key]
+
+
+def make_engine(**kw):
+    """Fresh ServeEngine over the shared tiny model (compiled steps still
+    dedupe through the runtime.steps module LRU)."""
+    from repro.runtime.serve import ServeConfig, ServeEngine
+
+    model, params = tiny_lm()
+    return ServeEngine(model, params, ServeConfig(**kw))
+
+
+def cached_engine(name, **kw):
+    """Engines are reusable after run(); suites share them by name so the
+    jitted steps compile once per test session.  The kwargs are part of
+    the cache key — the cache is global across test modules now, so two
+    files reusing a generic name ("dense", "wave") with different
+    configs must get different engines, not silently share one."""
+    key = ("engine", name,
+           tuple(sorted((k, repr(v)) for k, v in kw.items())))
+    if key not in _SHARED:
+        _SHARED[key] = make_engine(**kw)
+    return _SHARED[key]
+
+
+@pytest.fixture(scope="session")
+def tiny_serving_lm():
+    """(model, params) fixture view of ``tiny_lm()``."""
+    return tiny_lm()
+
+
+@pytest.fixture
+def engine_factory():
+    """Fixture view of ``make_engine`` (fresh engine per call)."""
+    return make_engine

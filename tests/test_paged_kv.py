@@ -1,13 +1,15 @@
 """Paged KV-cache subsystem: paged-kernel vs dense-ragged parity across
 (pos, active, page_size) grids, allocator invariants (no double-free,
 refcount balance, CoW isolation, full alloc/free round-trip), prefix-cache
-semantics, and engine pool-exhaustion + drain."""
+semantics, and engine pool-exhaustion + drain.  Engine construction
+helpers live in tests/conftest.py."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import make_engine, tiny_lm
 
 from repro.configs import get_config
 from repro.kernels.paged_attention import paged_decode_attention_tpu
@@ -357,12 +359,6 @@ else:
 
 
 # ------------------------------------------------------------ engine level
-def _tiny_model():
-    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
-                              num_layers=2, vocab_size=64)
-    return LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
-
-
 def _shared_prefix_trace(n, shared_len, seed=5):
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, 64, size=shared_len).astype(np.int32)
@@ -379,8 +375,7 @@ def _shared_prefix_trace(n, shared_len, seed=5):
 def test_paged_engine_matches_dense_outputs():
     """Greedy outputs are layout-invariant: the paged engine (prefix
     cache on) reproduces the dense continuous engine token for token."""
-    model = _tiny_model()
-    params = model.init(jax.random.PRNGKey(0))
+    model, params = tiny_lm()
     outs = {}
     for cache in ("dense", "paged"):
         eng = ServeEngine(model, params,
@@ -399,8 +394,7 @@ def test_paged_engine_pool_exhaustion_backpressure_and_drain():
     """Regression: a pool far smaller than slots * max_len serves the
     whole queue — admission backpressures instead of step() raising, and
     freed pages admit the stragglers."""
-    model = _tiny_model()
-    params = model.init(jax.random.PRNGKey(0))
+    model, params = tiny_lm()
     # 8 usable pages of 8 = 64 positions, vs 2 slots * max_len 32 = 64
     # dense positions, but requests need 3 pages each -> at most 2 live;
     # queue depth forces multiple backpressure/drain cycles
@@ -419,8 +413,7 @@ def test_paged_engine_pool_exhaustion_backpressure_and_drain():
 
 
 def test_paged_engine_rejects_impossible_request_at_submit():
-    model = _tiny_model()
-    params = model.init(jax.random.PRNGKey(0))
+    model, params = tiny_lm()
     eng = ServeEngine(model, params,
                       ServeConfig(batch_slots=1, max_len=32, cache="paged",
                                   page_size=8, num_pages=3))
@@ -429,8 +422,7 @@ def test_paged_engine_rejects_impossible_request_at_submit():
 
 
 def test_paged_engine_requires_continuous_attention():
-    model = _tiny_model()
-    params = model.init(jax.random.PRNGKey(0))
+    model, params = tiny_lm()
     with pytest.raises(ValueError):
         ServeEngine(model, params,
                     ServeConfig(batch_slots=1, max_len=32, mode="wave",
@@ -446,8 +438,7 @@ def test_paged_engine_requires_continuous_attention():
 def test_prefix_cache_skips_prefill_work():
     """Requests repeating a cached prompt admit at the last chunk: the
     engine's prefix stats show hits and the matched length."""
-    model = _tiny_model()
-    params = model.init(jax.random.PRNGKey(0))
+    model, params = tiny_lm()
     eng = ServeEngine(model, params,
                       ServeConfig(batch_slots=1, max_len=32, cache="paged",
                                   page_size=8, prefill_chunk=8))
@@ -463,7 +454,7 @@ def test_prefix_cache_skips_prefill_work():
 def test_copy_cache_pages_duplicates_page_in_every_layer_pool():
     """LM.copy_cache_pages (the device half of CoW for callers without
     the full-rewrite invariant) copies src -> dst in each stacked pool."""
-    model = _tiny_model()
+    model, _ = tiny_lm()
     caches = model.init_cache_paged(num_pages=5, page_size=8)
     leaf = caches["stack"]["k"]
     caches["stack"]["k"] = leaf.at[:, 2].set(7.0)
@@ -492,10 +483,7 @@ def test_pick_decode_splits_heuristic():
 
 
 def test_autotune_enabled_only_for_dense_pallas_auto():
-    model = _tiny_model()  # use_pallas=False
-    params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, ServeConfig(batch_slots=1,
-                                                 max_len=32))
+    eng = make_engine(batch_slots=1, max_len=32)  # use_pallas=False
     assert not eng._autotune  # XLA path: nothing to tune
     # fan-out 1 resolves to the engine's base steps (no split-K rebuild)
     assert eng._step_for_splits(1, False) is eng._step

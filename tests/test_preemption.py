@@ -1,45 +1,25 @@
 """Preemptive serving: slot checkpoint/restore (dense host snapshot via
 copy_cache_out/in, paged zero-copy page-chain detach), weighted-DRF SLO
 tiers, victim policies, preempt/resume/finish page-refcount balance, and
-the module-level compiled-step cache."""
-import dataclasses
-
-import jax
+the module-level compiled-step cache.  Engine construction helpers live
+in tests/conftest.py."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import cached_engine, make_engine as _engine, tiny_lm as _model
 
-from repro.configs import get_config
 from repro.models import LM, RuntimeKnobs
 from repro.runtime import steps
 from repro.runtime.kv_pool import KVCacheManager
 from repro.runtime.scheduler import (VICTIM_POLICIES, Scheduler,
                                      ServeResource, get_victim_policy)
-from repro.runtime.serve import (Request, RequestState, ServeConfig,
-                                 ServeEngine)
-
-_CACHE = {}
-
-
-def _model():
-    if "model" not in _CACHE:
-        cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
-                                  num_layers=2, vocab_size=64)
-        model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
-        _CACHE["model"] = model
-        _CACHE["params"] = model.init(jax.random.PRNGKey(0))
-    return _CACHE["model"], _CACHE["params"]
-
-
-def _engine(**kw):
-    model, params = _model()
-    return ServeEngine(model, params, ServeConfig(**kw))
+from repro.runtime.serve import Request, RequestState
 
 
 def _solo_outputs(prompts, max_new=8):
     """Uninterrupted greedy reference for each prompt (single-slot
     engine, shared across the module via the compiled-step cache)."""
-    eng = _CACHE.setdefault("solo", _engine(batch_slots=1, max_len=64))
+    eng = cached_engine("preemption-solo", batch_slots=1, max_len=64)
     out = []
     for i, p in enumerate(prompts):
         out.append(eng.submit(Request(i, p.copy(),

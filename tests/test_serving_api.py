@@ -1,14 +1,19 @@
 """Policy-driven serving front-end: admission policies (two-tenant DRF
 fairness vs FCFS starvation), SamplingParams (temp-0 bitwise-greedy across
-dense/paged, top-k/top-p membership, seeded determinism), ServeConfig +
-legacy-kwargs shim, RequestHandle lifecycle/streaming, run() stall
-reporting."""
+dense/paged, top-k/top-p membership, seeded determinism — wave mode
+included now that it samples host-side), ServeConfig + legacy-kwargs
+shim, RequestHandle lifecycle/streaming, run() stall reporting.  Engine
+construction helpers live in tests/conftest.py (shared with the
+preemption / paged-KV / spec-decode suites)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import cached_engine as _reused_engine
+from conftest import make_engine as _engine
+from conftest import tiny_lm as _model
 
 from repro.configs import get_config
 from repro.models import LM, RuntimeKnobs
@@ -17,31 +22,6 @@ from repro.runtime.scheduler import (ADMISSION_POLICIES, Scheduler,
                                      ServeResource, get_admission_policy)
 from repro.runtime.serve import (Request, RequestState, ServeConfig,
                                  ServeEngine, ServeStalled)
-
-_CACHE = {}
-
-
-def _model():
-    if "model" not in _CACHE:
-        cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
-                                  num_layers=2, vocab_size=64)
-        model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
-        _CACHE["model"] = model
-        _CACHE["params"] = model.init(jax.random.PRNGKey(0))
-    return _CACHE["model"], _CACHE["params"]
-
-
-def _engine(**kw):
-    model, params = _model()
-    return ServeEngine(model, params, ServeConfig(**kw))
-
-
-def _reused_engine(name, **kw):
-    """Engines are reusable after run(); share them across examples so the
-    jitted steps compile once per test session."""
-    if name not in _CACHE:
-        _CACHE[name] = _engine(**kw)
-    return _CACHE[name]
 
 
 # ----------------------------------------------------- policy unit behavior
@@ -293,10 +273,19 @@ def test_seeded_sampling_is_deterministic_and_slot_independent():
     assert {r.req_id: r.output for r in paged.run()}[0] == outs[0]
 
 
-def test_wave_mode_rejects_sampled_requests():
-    eng = _reused_engine("wave", batch_slots=2, max_len=32, mode="wave")
-    with pytest.raises(ValueError):
-        eng.submit(_req(0, sampling=SamplingParams(temperature=1.0)))
+def test_wave_mode_serves_sampled_requests_bitwise():
+    """Sampled wave mode (host-side draw from the wave logits via
+    ``sample_tokens``) decodes the identical seeded trajectory as the
+    continuous engine — wave slots advance from position 0 in lockstep,
+    so the (key, position) fold matches and the equality tests no longer
+    special-case greedy."""
+    trace = _trace(9, 4)
+    sp = SamplingParams(temperature=1.3, top_k=6, seed=77)
+    wave = _serve(_reused_engine("wave", batch_slots=2, max_len=32,
+                                 mode="wave"), trace, sp)
+    dense = _serve(_reused_engine("dense", batch_slots=2, max_len=32),
+                   trace, sp)
+    assert wave == dense
 
 
 # --------------------------------------------- request handle + lifecycle

@@ -1,0 +1,415 @@
+"""Speculative multi-token decode: drafter registry + n-gram proposer
+units, multi-token verify kernel/oracle parity, model-level verify ==
+sequential decode (bitwise), engine-level greedy speculative == PR 1
+baseline decode (bitwise, dense + paged, across draft lengths and slot
+placements), seeded sampled replay determinism, and paged rollback
+refcount balance including rollback-then-preempt round trips.  Engine
+construction helpers live in tests/conftest.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import cached_engine, make_engine, tiny_lm
+
+from repro.kernels.decode_attention import decode_attention_tpu
+from repro.kernels.paged_attention import paged_decode_attention_tpu
+from repro.kernels.ref import decode_attention_ref, paged_decode_attention_ref
+from repro.runtime.draft import DRAFTERS, NgramDrafter, get_drafter
+from repro.runtime.sampling import (SamplingParams, sample_tokens,
+                                    sample_tokens_multi, speculative_accept)
+from repro.runtime.serve import Request, RequestState
+
+
+# ------------------------------------------------------------ drafter units
+def test_drafter_registry_mirrors_policies():
+    assert set(DRAFTERS) == {"ngram"}
+    for name in DRAFTERS:
+        assert get_drafter(name).name == name
+    with pytest.raises(KeyError):
+        get_drafter("small-model")  # future registry entry, not yet
+
+
+def test_ngram_drafter_proposes_continuation_of_tail_match():
+    d = NgramDrafter(max_n=3, min_n=1)
+    ctx = np.array([5, 6, 7, 8, 5, 6, 7], np.int32)
+    # tail [5,6,7] matched at j=0; continuation is what followed: [8, 5]
+    assert d.propose(ctx, 2).tolist() == [8, 5]
+    # proposals never invent tokens: no tail match -> empty
+    assert d.propose(np.array([1, 2, 3, 4, 5], np.int32), 2).size == 0
+    assert d.propose(np.array([1], np.int32), 4).size == 0
+    assert d.propose(ctx, 0).size == 0
+
+
+def test_ngram_drafter_prefers_full_continuation_and_is_pure():
+    d = NgramDrafter(max_n=3, min_n=1)
+    ctx = np.array([1, 2] * 5, np.int32)  # period-2 decode loop
+    # most recent tail match truncates at the context end; the drafter
+    # must fall back to the latest occurrence with a FULL k continuation
+    assert d.propose(ctx, 3).tolist() == [1, 2, 1]
+    assert d.propose(ctx, 3).tolist() == d.propose(ctx, 3).tolist()
+
+
+def test_speculative_accept_longest_confirmed_prefix():
+    assert speculative_accept([], [4]) == 0
+    assert speculative_accept([4], [4, 9]) == 1
+    assert speculative_accept([4, 5, 6], [4, 5, 6, 7]) == 3
+    assert speculative_accept([4, 5, 6], [4, 9, 6, 7]) == 1
+    assert speculative_accept([3], [4, 3]) == 0  # position 0 mismatch
+
+
+# ----------------------------------------------------- sampling (pure fn)
+def test_sample_tokens_multi_matches_per_row_sample_tokens():
+    """Row t of the multi sampler is bitwise the single-token sampler at
+    fold position pos + t — the property that makes accepted speculative
+    draws identical to the baseline's draws."""
+    rng = np.random.default_rng(0)
+    b, t, v = 3, 4, 32
+    logits = jnp.asarray(rng.normal(size=(b, t, v)) * 3, jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 20, b), jnp.int32)
+    temp = jnp.asarray([0.0, 0.9, 1.7], jnp.float32)  # greedy row included
+    top_k = jnp.asarray([0, 5, 0], jnp.int32)
+    top_p = jnp.asarray([1.0, 1.0, 0.8], jnp.float32)
+    keys = jnp.asarray(rng.integers(0, 2 ** 31, (b, 2)), jnp.uint32)
+    multi = np.asarray(sample_tokens_multi(logits, pos, temp, top_k, top_p,
+                                           keys))
+    for i in range(t):
+        row = np.asarray(sample_tokens(logits[:, i], pos + i, temp, top_k,
+                                       top_p, keys))
+        assert np.array_equal(multi[:, i], row)
+    # greedy row is the raw argmax of every verify column
+    assert np.array_equal(multi[0], np.asarray(jnp.argmax(logits[0], -1)))
+
+
+# -------------------------------------------------------- kernel parity
+RNG = np.random.default_rng(7)
+
+
+def arr(*s):
+    return jnp.asarray(RNG.normal(size=s), jnp.float32)
+
+
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("tq", [2, 4])
+def test_multi_token_kernel_matches_ref(window, tq):
+    """The dense ragged kernel with a T-row query block equals the jnp
+    oracle — including windowed cases where a short draft row is fully
+    masked inside a block another row needs."""
+    b, kv, g, d, s = 3, 2, 2, 16, 64
+    h = kv * g
+    q = arr(b, h, tq, d)
+    k, v = arr(b, kv, s, d), arr(b, kv, s, d)
+    pos = np.array([0, 13, 59 - tq], np.int32)
+    ref = decode_attention_ref(q, k, v, pos, window=window)
+    out = decode_attention_tpu(q, k, v, pos, window=window, block_k=16,
+                               interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+    # parked slot still returns zeros with a multi-row block
+    out2 = decode_attention_tpu(q, k, v, np.array([-1, 5, 20], np.int32),
+                                window=window, block_k=16, interpret=True)
+    assert float(jnp.max(jnp.abs(out2[0]))) == 0.0
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_multi_token_paged_kernel_matches_ref(window):
+    b, kv, g, d, ps, mp, tq = 3, 2, 2, 16, 8, 8, 3
+    h = kv * g
+    n_pages = 1 + b * mp
+    kp, vp = arr(n_pages, kv, ps, d), arr(n_pages, kv, ps, d)
+    pt = RNG.permutation(np.arange(1, n_pages))[:b * mp] \
+        .reshape(b, mp).astype(np.int32)
+    q = arr(b, h, tq, d)
+    pos = np.array([-1, 7, 50], np.int32)
+    ref = paged_decode_attention_ref(q, kp, vp, pt, pos, window=window)
+    out = paged_decode_attention_tpu(q, kp, vp, jnp.asarray(pt), pos,
+                                     window=window, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+    assert float(jnp.max(jnp.abs(out[0]))) == 0.0
+
+
+# ------------------------------------------- model-level verify (bitwise)
+def test_verify_step_logits_bitwise_equal_sequential_decode():
+    """One multi-token verify pass produces, row by row, the exact fp32
+    logits sequential decode emits at the same positions — dense and
+    paged.  This is the kernel-level half of the bitwise guarantee."""
+    model, params = tiny_lm()
+    B, S, T, ps = 2, 32, 3, 8
+    dec = jax.jit(model.decode_step)
+    spec = jax.jit(model.decode_step_spec)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 64, size=(B, T)).astype(np.int32)
+    pos0 = np.array([2, 9], np.int32)
+
+    caches = model.init_cache(B, S)
+    seq = []
+    for t in range(T):
+        lg, caches = dec(params, caches, jnp.asarray(toks[:, t:t + 1]),
+                         jnp.asarray(pos0 + t))
+        seq.append(np.asarray(lg))
+    seq = np.stack(seq, axis=1)
+    got, _ = spec(params, model.init_cache(B, S), jnp.asarray(toks),
+                  jnp.asarray(pos0))
+    assert np.array_equal(np.asarray(got), seq)
+
+    mp = S // ps
+    pt = np.arange(1, 1 + B * mp, dtype=np.int32).reshape(B, mp)
+    n_pages = 1 + B * mp
+    decp = jax.jit(lambda p, c, t_, po, pi: model.decode_step_paged(
+        p, c, t_, po, pi, page_size=ps))
+    specp = jax.jit(lambda p, c, t_, po, pi: model.decode_step_spec_paged(
+        p, c, t_, po, pi, page_size=ps))
+    caches = model.init_cache_paged(n_pages, ps)
+    seqp = []
+    for t in range(T):
+        lg, caches = decp(params, caches, jnp.asarray(toks[:, t:t + 1]),
+                          jnp.asarray(pos0 + t), jnp.asarray(pt))
+        seqp.append(np.asarray(lg))
+    seqp = np.stack(seqp, axis=1)
+    gotp, _ = specp(params, model.init_cache_paged(n_pages, ps),
+                    jnp.asarray(toks), jnp.asarray(pos0), jnp.asarray(pt))
+    assert np.array_equal(np.asarray(gotp), seqp)
+    assert np.array_equal(seqp, seq)  # layout-invariant too
+
+
+def test_spec_decode_rejected_for_ssm_plans():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import LM, RuntimeKnobs
+    from repro.runtime.serve import ServeConfig, ServeEngine
+
+    cfg = dataclasses.replace(get_config("mamba2-1.3b", smoke=True),
+                              vocab_size=64)
+    ssm = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+    with pytest.raises(ValueError, match="speculative"):
+        ServeEngine(ssm, ssm.init(jax.random.PRNGKey(0)),
+                    ServeConfig(batch_slots=1, max_len=32, draft_k=2))
+    with pytest.raises(ValueError, match="continuous"):
+        make_engine(batch_slots=1, max_len=32, mode="wave", draft_k=2)
+    with pytest.raises(ValueError):
+        make_engine(batch_slots=1, max_len=32, draft_k=-1)
+    with pytest.raises(ValueError, match="too deep"):
+        make_engine(batch_slots=1, max_len=8, draft_k=8)
+
+
+# --------------------------------------------------- engine level (greedy)
+def _trace(seed, n, max_new=10, vocab=64):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, vocab, size=int(rng.integers(1, 7)))
+             .astype(np.int32), max_new) for _ in range(n)]
+
+
+def _serve(eng, trace, sampling=None):
+    for i, (prompt, max_new) in enumerate(trace):
+        eng.submit(Request(i, prompt.copy(), max_new_tokens=max_new,
+                           sampling=sampling or SamplingParams()))
+    return {r.req_id: r.output for r in eng.run()}
+
+
+def _baseline(trace):
+    return _serve(cached_engine("spec-base", batch_slots=2, max_len=64),
+                  trace)
+
+
+@pytest.mark.parametrize("cache_kw", [
+    {}, {"cache": "paged", "page_size": 8},
+], ids=["dense", "paged"])
+@pytest.mark.parametrize("k", [1, 3])
+def test_greedy_spec_engine_bitwise_matches_baseline(cache_kw, k):
+    """The acceptance gate: greedy speculative output streams are
+    bitwise-identical to the non-speculative engine's, dense and paged,
+    across draft depths — and the spec path actually speculated."""
+    trace = _trace(0, 5)
+    base = _baseline(trace)
+    eng = cached_engine(f"spec-{k}-{tuple(sorted(cache_kw))}",
+                        batch_slots=2, max_len=64, draft_k=k, **cache_kw)
+    assert _serve(eng, trace) == base
+    st = eng.spec_stats()
+    assert st["proposed"] > 0  # the drafter did real work on this trace
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert st["tokens_per_tick"] >= 1.0  # never worse than plain decode
+
+
+def test_spec_engine_bitwise_across_slot_placements():
+    """The same requests decode identically whatever slot mix serves
+    them: 1-slot (serial), 3-slot (all concurrent), and arrival-order
+    permutations over a 2-slot engine."""
+    trace = _trace(4, 3, max_new=8)
+    base = _baseline(trace)
+    for slots in (1, 3):
+        eng = cached_engine(f"spec-slots-{slots}", batch_slots=slots,
+                            max_len=64, draft_k=2)
+        assert _serve(eng, trace) == base
+    eng = cached_engine("spec-slots-2", batch_slots=2, max_len=64,
+                        draft_k=2)
+    for i, (prompt, max_new) in reversed(list(enumerate(trace))):
+        eng.submit(Request(i, prompt.copy(), max_new_tokens=max_new))
+    assert {r.req_id: r.output for r in eng.run()} == base
+
+
+def test_draft_cap_respects_budget_window_and_page_span():
+    """_draft_cap never lets a draft overshoot the token budget, the
+    max_len window, or (paged) the slot's reserved page span."""
+    eng = make_engine(batch_slots=1, max_len=16, draft_k=4, cache="paged",
+                      page_size=8, num_pages=5)
+    req = Request(0, np.arange(1, 4, dtype=np.int32), max_new_tokens=20)
+    eng.submit(req)
+    eng.step()  # prefill + first verify tick
+    s = next(i for i, r in enumerate(eng.active) if r is req)
+    cap = eng._draft_cap(s, req)
+    assert cap <= req.max_new_tokens - len(req.output) - 1
+    assert int(eng.pos[s]) + 1 + cap <= eng.max_len - 1
+    assert int(eng.pos[s]) + cap <= eng.kv.slot_span(s) - 1
+    out = eng.run()  # drains without tripping any page/window assert
+    assert out[0].finish_reason == "length"
+    assert eng.kv.pool.in_use == 0
+
+
+def test_stop_sequences_truncate_accepted_drafts():
+    """A stop hit inside an accepted draft block ends the request at the
+    stop token — accepted-but-past-stop tokens must be discarded, like
+    the sequential engine which never produces them."""
+    trace = _trace(11, 1, max_new=10)
+    base = _baseline(trace)[0]
+    assert len(base) > 3
+    stop = (tuple(base[1:3]),)
+    ref = _serve(cached_engine("spec-base", batch_slots=2, max_len=64),
+                 trace, SamplingParams(stop=stop))
+    got = _serve(cached_engine("spec-3-()", batch_slots=2, max_len=64,
+                               draft_k=3), trace, SamplingParams(stop=stop))
+    assert got == ref  # bitwise incl. the truncation point
+    assert len(got[0]) < len(base)  # the stop actually fired early
+    assert tuple(got[0][-2:]) == stop[0]
+
+
+# ------------------------------------------------- engine level (sampled)
+def test_seeded_sampled_spec_replays_deterministically():
+    """Seeded sampled speculative runs are replay-deterministic AND equal
+    to the non-speculative engine's sampled trajectory — each verify row
+    folds its absolute position into the request key, so acceptance only
+    ever confirms the token the baseline would have drawn."""
+    trace = _trace(8, 4)
+    sp = SamplingParams(temperature=1.4, top_k=8, seed=123)
+    base = _serve(cached_engine("spec-base", batch_slots=2, max_len=64),
+                  trace, sp)
+    eng = cached_engine("spec-3-()", batch_slots=2, max_len=64, draft_k=3)
+    first = _serve(eng, trace, sp)
+    again = _serve(eng, trace, sp)
+    assert first == again == base
+    paged = _serve(
+        cached_engine("spec-3-('cache', 'page_size')", batch_slots=2,
+                      max_len=64, draft_k=3, cache="paged", page_size=8),
+        trace, sp)
+    assert paged == base
+
+
+# ------------------------------------------ rollback + preemption (paged)
+_WEIGHTED = dict(policy="drf-fair", tenant_weights={"gold": 3, "free": 1},
+                 preempt=True, victim_policy="lowest-weight-share-first")
+
+
+def _prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 64, size=int(rng.integers(2, 6)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _spec_flood(eng, prompts, *, n_gold, max_new=8):
+    for i in range(n_gold):
+        eng.submit(Request(i, prompts[i].copy(), max_new_tokens=max_new,
+                           tenant="gold"))
+    eng.step()
+    eng.step()
+    for i in range(n_gold, len(prompts)):
+        eng.submit(Request(i, prompts[i].copy(), max_new_tokens=max_new,
+                           tenant="free"))
+    return {r.req_id: r for r in eng.run()}
+
+
+def test_paged_rollback_then_preempt_refcount_balanced_and_bitwise():
+    """The hard composition: speculative rejections (position rollback)
+    interleaved with preemption checkpoints (page-chain detach/attach)
+    must leak no page, double-free no page, and still replay every
+    request bitwise-identical to its uninterrupted solo run."""
+    prompts = _prompts(9, seed=3)
+    solo = cached_engine("spec-solo", batch_slots=1, max_len=64, draft_k=3)
+    ref = [solo.submit(Request(i, p.copy(), max_new_tokens=8)).result()
+           .output for i, p in enumerate(prompts)]
+    eng = make_engine(batch_slots=4, max_len=64, cache="paged", page_size=8,
+                      prefix_cache=False, draft_k=3, **_WEIGHTED)
+    done = _spec_flood(eng, prompts, n_gold=7)
+    assert eng.scheduler.preempted_total >= 1
+    assert sum(r.preempt_count for r in done.values()) >= 1
+    for i in range(len(prompts)):
+        assert done[i].output == ref[i], \
+            f"request {i} (preempted {done[i].preempt_count}x) diverged"
+    # refcount balance: every non-null page back on the free list
+    assert eng.kv.pool.in_use == 0
+    assert not np.any(np.asarray(eng.kv.pool.ref[1:]))
+    assert not np.any(eng.kv.page_table)
+    assert all(v == 0.0 for v in eng.scheduler.shares().values())
+
+
+def test_dense_spec_preemption_round_trip_bitwise():
+    """Dense checkpoint (host stripe snapshot) under speculation: stale
+    rejected-draft K/V rides along in the snapshot and must never leak
+    into the resumed stream."""
+    prompts = _prompts(8, seed=6)
+    solo = cached_engine("spec-solo", batch_slots=1, max_len=64, draft_k=3)
+    ref = [solo.submit(Request(i, p.copy(), max_new_tokens=8)).result()
+           .output for i, p in enumerate(prompts)]
+    eng = make_engine(batch_slots=4, max_len=64, draft_k=3, **_WEIGHTED)
+    done = _spec_flood(eng, prompts, n_gold=6)
+    assert eng.scheduler.preempted_total >= 1
+    for i in range(len(prompts)):
+        assert done[i].output == ref[i]
+
+
+# ----------------------------------------------------- hypothesis (slow)
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @pytest.mark.slow
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.sampled_from([1, 3]),
+           paged=st.booleans(), n=st.integers(1, 4))
+    def test_greedy_spec_bitwise_hypothesis(seed, k, paged, n):
+        """Random traces decode bitwise-identically through the
+        speculative engines across draft lengths and cache layouts
+        (engines are shared so each (k, layout) compiles once)."""
+        trace = _trace(seed, n, max_new=8)
+        base = _baseline(trace)
+        kw = {"cache": "paged", "page_size": 8} if paged else {}
+        eng = cached_engine(f"spec-{k}-{tuple(sorted(kw))}", batch_slots=2,
+                            max_len=64, draft_k=k, **kw)
+        assert _serve(eng, trace) == base
+
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), sample_seed=st.integers(0, 2 ** 20))
+    def test_sampled_spec_replay_hypothesis(seed, sample_seed):
+        """Seeded sampled speculative runs replay bitwise and match the
+        non-speculative sampled trajectory for arbitrary seeds."""
+        trace = _trace(seed, 2, max_new=6)
+        sp = SamplingParams(temperature=1.1, top_k=6, seed=sample_seed)
+        base = _serve(cached_engine("spec-base", batch_slots=2, max_len=64),
+                      trace, sp)
+        eng = cached_engine("spec-3-()", batch_slots=2, max_len=64,
+                            draft_k=3)
+        assert _serve(eng, trace, sp) == base
+
+    @pytest.mark.slow
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_paged_rollback_refcount_hypothesis(seed):
+        """Random spec + preemption floods always drain the pool back to
+        refcount balance (no leak, no double-free)."""
+        prompts = _prompts(8, seed=seed)
+        eng = make_engine(batch_slots=3, max_len=64, cache="paged",
+                          page_size=8, prefix_cache=False, draft_k=2,
+                          **_WEIGHTED)
+        _spec_flood(eng, prompts, n_gold=6)
+        assert eng.kv.pool.in_use == 0
+        assert not np.any(np.asarray(eng.kv.pool.ref[1:]))
+        assert not np.any(eng.kv.page_table)
