@@ -1,0 +1,211 @@
+"""Cluster serving: replica-scaling throughput + a chaos recovery gate.
+
+Part 1 (scaling) drives the same request trace through a
+``ClusterRouter`` fronting N in {1, 2, 4} ``ServeEngine`` replicas
+(spread placement) and reports **aggregate tokens/s** per pool size.
+Replicas share model/params, so the compiled steps dedupe through the
+``runtime.steps`` module LRU — scaling measures router + engine work,
+not recompilation.
+
+Part 2 (chaos) is the robustness twin the perf number cannot ship
+without: the identical trace runs once fault-free and once under a
+seeded kill + rejoin schedule (one of three replicas dies mid-run and
+later rejoins).  The gate asserts, in-process and machine-independent:
+
+* every submitted request completes (zero lost to the fault),
+* every output is **bitwise-identical** to the fault-free run
+  (deterministic replay recovery: re-prefill of prompt + already-emitted
+  tokens under PR 3's position-folded sampling),
+* at least one request actually exercised recovery,
+* the surviving replicas' page pools drain to zero (no leaked pages from
+  requests that died mid-flight elsewhere),
+* brown-out honors the SLO tiers: gold p99 TTFT <= free p99 TTFT while
+  capacity is degraded (weighted shedding protects gold).
+
+    PYTHONPATH=src python benchmarks/cluster_serve.py [--dry]
+
+Emits BENCH_cluster_serve[_dry].json via ``common.emit_json``;
+``scripts/check_bench.py`` gates the dry numbers against
+``benchmarks/baselines/``.
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # python -m benchmarks.cluster_serve
+    from .common import emit_json
+except ImportError:  # python benchmarks/cluster_serve.py
+    sys.path.insert(0, os.path.dirname(__file__))
+    from common import emit_json
+from repro.configs import get_config
+from repro.models import LM, RuntimeKnobs
+from repro.runtime.cluster import ClusterRouter
+from repro.runtime.fault import FaultEvent, ReplicaFaultInjector
+from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
+                                 ServeEngine)
+
+TENANT_WEIGHTS = {"gold": 3.0, "free": 1.0}
+
+
+def trace(*, n, max_new, vocab, seed=0):
+    """Mixed trace: greedy and seeded-sampled requests, gold/free tiers
+    interleaved (1 gold : 2 free) so brown-out shedding has tiers to
+    arbitrate."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 12))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        sp = SamplingParams(temperature=0.8 if i % 2 else 0.0, seed=11)
+        reqs.append(Request(i, prompt, max_new_tokens=max_new, sampling=sp,
+                            tenant="gold" if i % 3 == 0 else "free"))
+    return reqs
+
+
+def fresh(reqs):
+    """Requests are mutated by serving; each run gets its own copies."""
+    return [dataclasses.replace(r, prompt=np.asarray(r.prompt), output=[])
+            for r in reqs]
+
+
+def run_pool(model, params, reqs, *, n_replicas, slots, max_len,
+             injector=None, cache="dense"):
+    def make_engine(rid):
+        return ServeEngine(model, params, ServeConfig(
+            batch_slots=slots, max_len=max_len, cache=cache, page_size=8,
+            prefix_cache=False, policy="drf-fair",
+            tenant_weights=TENANT_WEIGHTS))
+
+    router = ClusterRouter(make_engine, n_replicas, policy="spread",
+                           tenant_weights=TENANT_WEIGHTS,
+                           injector=injector)
+    handles = [router.submit(r) for r in reqs]
+    t0 = time.perf_counter()
+    done = router.run(max_ticks=20_000)
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    out = {
+        "requests": len(done), "tokens": int(toks), "wall_s": wall,
+        "tok_per_s": toks / max(wall, 1e-9),
+        "all_completed": bool(
+            len(done) == len(reqs)
+            and all(r.finish_reason != "failed" for r in done)),
+        "outputs": {r.req_id: list(r.output) for r in done},
+        "stats": router.stats(),
+    }
+    ttft = {"gold": [], "free": []}
+    for h in handles:
+        t = h.metrics().get("ttft_s")
+        if t is not None:
+            ttft[h.req.tenant].append(t)
+    for tier, vals in ttft.items():
+        if vals:
+            out[f"{tier}_p99_ttft_s"] = float(np.percentile(vals, 99))
+    out["pool_drained"] = all(
+        rh.engine.kv.pool.in_use == 0
+        for rh in router.replicas
+        if rh.engine is not None and rh.engine.kv is not None)
+    return out
+
+
+def run(dry: bool = True, slots: int = 2, max_len: int = 96):
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              num_layers=2, vocab_size=64)
+    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+    params = model.init(jax.random.PRNGKey(0))
+
+    trace_kw = (dict(n=12, max_new=16) if dry
+                else dict(n=32, max_new=48))
+    reqs = trace(vocab=cfg.vocab_size, **trace_kw)
+    results = {"trace": trace_kw, "slots": slots, "max_len": max_len,
+               "tenant_weights": TENANT_WEIGHTS}
+
+    # warm the compiled steps so Part 1 times serving, not jit
+    run_pool(model, params, fresh(reqs[:2]), n_replicas=1, slots=slots,
+             max_len=max_len)
+    run_pool(model, params, fresh(reqs[:2]), n_replicas=1, slots=slots,
+             max_len=max_len, cache="paged")
+
+    # ---- Part 1: replica scaling ------------------------------------
+    for n in (1, 2, 4):
+        r = run_pool(model, params, fresh(reqs), n_replicas=n,
+                     slots=slots, max_len=max_len)
+        results[f"tok_per_s_{n}"] = r["tok_per_s"]
+        results[f"all_completed_{n}"] = r["all_completed"]
+        print(f"scaling N={n}: {r['tokens']} tok in {r['wall_s']:.2f}s "
+              f"-> {r['tok_per_s']:.1f} tok/s")
+
+    # ---- Part 2: chaos vs fault-free twin ---------------------------
+    # paged engines so the gate also covers page recovery/refcounts;
+    # kill replica 1 early (mid-prefill/decode for the first batch),
+    # rejoin it before the run ends
+    horizon = 6 if dry else 12
+    injector = ReplicaFaultInjector([
+        FaultEvent(horizon, "kill", 1),
+        FaultEvent(horizon * 5, "rejoin", 1),
+    ])
+    clean = run_pool(model, params, fresh(reqs), n_replicas=3,
+                     slots=slots, max_len=max_len, cache="paged")
+    chaos = run_pool(model, params, fresh(reqs), n_replicas=3,
+                     slots=slots, max_len=max_len, cache="paged",
+                     injector=injector)
+    st = chaos["stats"]
+    results["chaos"] = {
+        k: chaos[k] for k in ("requests", "tokens", "wall_s", "tok_per_s",
+                              "all_completed", "pool_drained")
+        if k in chaos}
+    results["chaos"].update(
+        recoveries=st["recoveries"], replicas_lost=st["replicas_lost"],
+        brownout_ticks=st["brownout_ticks"], failed=st["failed"])
+    results["chaos_bitwise_identical"] = bool(
+        chaos["outputs"] == clean["outputs"])
+    for tier in ("gold", "free"):
+        key = f"{tier}_p99_ttft_s"
+        if key in chaos:
+            results[f"chaos_{key}"] = chaos[key]
+    results["gold_p99_ttft_bounded"] = bool(
+        results.get("chaos_gold_p99_ttft_s", 0.0)
+        <= results.get("chaos_free_p99_ttft_s", float("inf")))
+    print(f"chaos: {st['replicas_lost']} replica lost, "
+          f"{st['recoveries']} recoveries, bitwise identical "
+          f"{results['chaos_bitwise_identical']}, gold p99 ttft "
+          f"{results.get('chaos_gold_p99_ttft_s', 0) * 1e3:.0f}ms vs free "
+          f"{results.get('chaos_free_p99_ttft_s', 0) * 1e3:.0f}ms")
+
+    emit_json("cluster_serve_dry" if dry else "cluster_serve", results)
+    # headline claims, asserted in-process (machine-independent):
+    assert all(results[f"all_completed_{n}"] for n in (1, 2, 4)), \
+        "a fault-free pool dropped requests"
+    assert chaos["all_completed"], \
+        "requests were lost to the injected replica kill"
+    assert results["chaos_bitwise_identical"], \
+        "recovered outputs diverged from the fault-free run"
+    assert st["recoveries"] >= 1, \
+        "the kill schedule recovered nothing — the gate tested nothing"
+    assert chaos["pool_drained"], \
+        "surviving replicas leaked KV pages after recovery"
+    assert results["gold_p99_ttft_bounded"], \
+        "brown-out shedding failed to protect the gold tier"
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="fast CI mode: tiny trace")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=96)
+    args = ap.parse_args()
+    run(dry=args.dry, slots=args.slots, max_len=args.max_len)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,8 @@ import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
-DEFAULT_NAMES = ("serve_throughput", "paged_serve", "spec_decode")
+DEFAULT_NAMES = ("serve_throughput", "paged_serve", "spec_decode",
+                 "cluster_serve")
 
 # (json path into the payload, kind): kind "rate" = higher is better,
 # "latency" = lower is better, gated by the respective tolerance
@@ -64,6 +65,12 @@ METRICS = {
     "spec_decode": [
         (("spec", "tok_per_s"), "rate"),
         (("spec_paged", "tok_per_s"), "rate"),
+    ],
+    "cluster_serve": [
+        (("tok_per_s_1",), "rate"),
+        (("tok_per_s_2",), "rate"),
+        (("tok_per_s_4",), "rate"),
+        (("chaos", "tok_per_s"), "rate"),
     ],
 }
 
@@ -97,6 +104,24 @@ BOUNDS = {
         (("spec_paged", "pool_drained"), lambda v: bool(v),
          "paged spec run returned every page (no rollback leak)"),
     ],
+    "cluster_serve": [
+        (("all_completed_1",), lambda v: bool(v),
+         "fault-free pool N=1 served every request"),
+        (("all_completed_2",), lambda v: bool(v),
+         "fault-free pool N=2 served every request"),
+        (("all_completed_4",), lambda v: bool(v),
+         "fault-free pool N=4 served every request"),
+        (("chaos", "all_completed"), lambda v: bool(v),
+         "zero requests lost to the injected replica kill"),
+        (("chaos", "recoveries"), lambda v: v >= 1,
+         "the kill schedule actually exercised recovery"),
+        (("chaos_bitwise_identical",), lambda v: bool(v),
+         "recovered outputs bitwise-identical to the fault-free run"),
+        (("chaos", "pool_drained"), lambda v: bool(v),
+         "surviving replicas returned every KV page after recovery"),
+        (("gold_p99_ttft_bounded",), lambda v: bool(v),
+         "brown-out shedding kept gold p99 TTFT <= free p99 TTFT"),
+    ],
 }
 
 
@@ -107,13 +132,22 @@ def dig(payload: dict, path: tuple):
 
 
 def run_dry(name: str) -> None:
+    script = os.path.join(ROOT, "benchmarks", f"{name}.py")
+    if not os.path.exists(script):
+        sys.exit(f"check_bench: benchmark script "
+                 f"{os.path.relpath(script, ROOT)} does not exist (gated "
+                 f"name without a benchmark? known: {sorted(METRICS)})")
     env = dict(os.environ)
     env["PYTHONPATH"] = (os.path.join(ROOT, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
     env.setdefault("JAX_PLATFORMS", "cpu")
-    subprocess.run(
-        [sys.executable, os.path.join(ROOT, "benchmarks", f"{name}.py"),
-         "--dry"], check=True, cwd=ROOT, env=env)
+    proc = subprocess.run([sys.executable, script, "--dry"],
+                          cwd=ROOT, env=env)
+    if proc.returncode != 0:
+        sys.exit(f"check_bench: benchmarks/{name}.py --dry exited with "
+                 f"status {proc.returncode} — fix the benchmark (its "
+                 f"in-process asserts gate correctness) before gating "
+                 f"its numbers")
 
 
 def check(name: str, tol: float, lat_tol: float,
@@ -172,8 +206,14 @@ def update(names) -> None:
     for name in names:
         src = os.path.join(ROOT, f"BENCH_{name}_dry.json")
         dst = os.path.join(BASELINE_DIR, f"BENCH_{name}_dry.json")
+        if not os.path.exists(src):
+            sys.exit(f"check_bench: cannot re-baseline {name} — no fresh "
+                     f"run at {os.path.relpath(src, ROOT)} (run "
+                     f"benchmarks/{name}.py --dry first, or drop --no-run)")
+        first = not os.path.exists(dst)
         shutil.copyfile(src, dst)
-        print(f"re-baselined {os.path.relpath(dst, ROOT)}")
+        print(f"{'created baseline' if first else 're-baselined'} "
+              f"{os.path.relpath(dst, ROOT)}")
 
 
 def main():
@@ -212,8 +252,9 @@ def main():
 
     if args.update:
         for name in names:
-            print(f"== fresh dry run: {name} ==")
-            run_dry(name)
+            if not args.no_run:
+                print(f"== fresh dry run: {name} ==")
+                run_dry(name)
         update(names)
         return
     failures = []

@@ -2,7 +2,7 @@
 # Tiered CI entry point — the local mirror of .github/workflows/ci.yml.
 # Run from anywhere:
 #
-#   bash scripts/ci.sh [lint|tier1|smoke|bench|all]
+#   bash scripts/ci.sh [lint|tier1|smoke|chaos|bench|all]
 #
 #   lint   ruff check (skipped with a warning if ruff is not installed)
 #   tier1  fast pytest lane:  -m "not slow"  (the per-push CI lane);
@@ -12,8 +12,12 @@
 #   smoke  per-arch smoke_all + serving launcher smokes (paged, every
 #          admission policy, preemption + weighted SLO tiers,
 #          speculative decode)
+#   chaos  cluster-serving chaos smoke: one of three replicas is killed
+#          mid-run via --fault-schedule and must rejoin; the launcher
+#          asserts zero lost requests (recovery by deterministic replay)
 #   bench  dry benchmarks + the regression gate (scripts/check_bench.py)
-#   all    full pytest (the pre-merge lane) + smoke + bench  [default]
+#   all    full pytest (the pre-merge lane) + smoke + chaos + bench
+#          [default]
 #
 # Re-baselining the bench gate after an intentional perf change:
 #   python scripts/check_bench.py --update   # then commit the baselines
@@ -85,6 +89,23 @@ smoke() {
         --speculate --draft-k 3 --cache paged --page-size 8
 }
 
+chaos() {
+    echo "== cluster chaos smoke (kill 1 of 3 replicas mid-run) =="
+    # the launcher exits nonzero if any request fails its retry budget,
+    # so "zero lost requests" is asserted in-process
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 9 --slots 2 --max-len 64 --max-new 8 \
+        --replicas 3 --router-policy spread \
+        --tenants 2 --tenant-weights "tenant-0=3,tenant-1=1" \
+        --fault-schedule "4:kill:1,24:rejoin:1" --miss-threshold 2
+
+    echo "== cluster chaos smoke (seeded schedule, paged KV) =="
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 9 --slots 2 --max-len 64 --max-new 8 \
+        --replicas 3 --cache paged --page-size 8 --no-prefix-cache \
+        --fault-schedule "seed=3:3:30"
+}
+
 bench() {
     echo "== dry benchmarks + regression gate =="
     # headroom over the strict defaults: local dev boxes and shared
@@ -97,9 +118,10 @@ case "$tier" in
     lint)  lint ;;
     tier1) tier1 ;;
     smoke) smoke ;;
+    chaos) chaos ;;
     bench) bench ;;
-    all)   lint; full_tests; smoke; bench ;;
-    *) echo "usage: $0 [lint|tier1|smoke|bench|all]" >&2; exit 2 ;;
+    all)   lint; full_tests; smoke; chaos; bench ;;
+    *) echo "usage: $0 [lint|tier1|smoke|chaos|bench|all]" >&2; exit 2 ;;
 esac
 
 echo "CI OK ($tier)"

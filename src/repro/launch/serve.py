@@ -26,6 +26,16 @@ weighted-DRF shares.
 ``--speculate`` enables speculative multi-token decode (``--draft-k N``
 tokens per slot per tick, ``--drafter`` from ``runtime.draft.DRAFTERS``);
 the run reports the draft acceptance rate alongside throughput.
+
+``--replicas N`` (N > 1, or any ``--fault-schedule``) fronts N engine
+replicas with a ``runtime.cluster.ClusterRouter``: requests are placed
+via ``--router-policy pack|spread`` offers, lost replicas are detected by
+heartbeat (``--miss-threshold``) and their in-flight requests recovered
+by deterministic replay on the survivors (``--retry-budget`` replays per
+request).  ``--fault-schedule`` injects reproducible chaos — either
+explicit ``TICK:ACTION:REPLICA[:ARG[:TICKS]]`` entries (e.g.
+``"8:kill:1,30:rejoin:1"``) or ``"seed=SEED"`` for a generated schedule;
+the run asserts zero lost requests.
 """
 from __future__ import annotations
 
@@ -38,7 +48,9 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import LM, RuntimeKnobs
+from repro.runtime.cluster import ROUTER_POLICIES, ClusterRouter
 from repro.runtime.draft import DRAFTERS
+from repro.runtime.fault import ReplicaFaultInjector
 from repro.runtime.scheduler import ADMISSION_POLICIES, VICTIM_POLICIES
 from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
                                  ServeEngine)
@@ -107,14 +119,29 @@ def main():
     ap.add_argument("--page-policy", choices=("pack", "spread"),
                     default="pack")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N engine replicas with a ClusterRouter")
+    ap.add_argument("--router-policy", choices=sorted(ROUTER_POLICIES),
+                    default="spread",
+                    help="replica placement policy (with --replicas > 1)")
+    ap.add_argument("--fault-schedule", default=None,
+                    metavar="T:ACT:R[,...]|seed=N",
+                    help="inject chaos: 'TICK:ACTION:REPLICA[:ARG[:TICKS]]"
+                         ",...' or 'seed=SEED' (forces the router path)")
+    ap.add_argument("--miss-threshold", type=int, default=3,
+                    help="heartbeat misses before a replica is LOST")
+    ap.add_argument("--retry-budget", type=int, default=3,
+                    help="recovery replays per request before it fails")
     args = ap.parse_args()
     if args.speculate and args.draft_k <= 0:
         ap.error(f"--speculate needs --draft-k >= 1 (got {args.draft_k})")
+    if args.replicas < 1:
+        ap.error(f"--replicas must be >= 1 (got {args.replicas})")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, ServeConfig(
+    serve_cfg = ServeConfig(
         batch_slots=args.slots, max_len=args.max_len, mode=args.mode,
         prefill_chunk=args.prefill_chunk, cache=args.cache,
         page_size=args.page_size, num_pages=args.num_pages,
@@ -123,21 +150,39 @@ def main():
         tenant_weights=args.tenant_weights, preempt=args.preempt,
         victim_policy=args.victim_policy,
         draft_k=args.draft_k if args.speculate else 0,
-        drafter=args.drafter))
+        drafter=args.drafter)
+
+    # replicas share model/params; compiled steps dedupe via runtime.steps
+    def make_engine(rid):
+        return ServeEngine(model, params, serve_cfg)
+
+    router = None
+    if args.replicas > 1 or args.fault_schedule:
+        injector = (ReplicaFaultInjector.parse(args.fault_schedule)
+                    if args.fault_schedule else None)
+        router = ClusterRouter(make_engine, args.replicas,
+                               policy=args.router_policy,
+                               miss_threshold=args.miss_threshold,
+                               retry_budget=args.retry_budget,
+                               tenant_weights=args.tenant_weights or {},
+                               injector=injector)
+    else:
+        engine = make_engine(0)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed)
     rng = np.random.default_rng(0)
     handles = []
+    front = router if router is not None else engine
     for i in range(args.requests):
         plen = int(rng.integers(1, 6))
-        handles.append(engine.submit(Request(
+        handles.append(front.submit(Request(
             i, rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
             max_new_tokens=args.max_new, sampling=sampling,
             tenant=f"tenant-{i % max(args.tenants, 1)}",
             priority=i % 3)))
     t0 = time.time()
-    done = engine.run()
+    done = front.run()
     dt = time.time() - t0
     toks = sum(len(r.output) for r in done)
     ttft = [h.metrics().get("ttft_s") for h in handles]
@@ -145,11 +190,19 @@ def main():
     print(f"arch={args.arch} mode={args.mode} cache={args.cache} "
           f"policy={args.policy} served {len(done)} requests, {toks} "
           f"tokens in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
-    if args.preempt:
+    if router is not None:
+        st = router.stats()
+        print(f"cluster: replicas={args.replicas} "
+              f"router-policy={args.router_policy} ticks={st['ticks']} "
+              f"lost={st['replicas_lost']} recoveries={st['recoveries']} "
+              f"brownout-ticks={st['brownout_ticks']}")
+        lost = [r.req_id for r in done if r.finish_reason == "failed"]
+        assert not lost, f"requests lost despite recovery: {lost}"
+    if args.preempt and router is None:
         print(f"preemptions: {engine.scheduler.preempted_total} "
               f"(requests preempted >=1x: "
               f"{sum(1 for r in done if r.preempt_count)})")
-    if args.speculate:
+    if args.speculate and router is None:
         st = engine.spec_stats()
         print(f"speculative: draft_k={st['draft_k']} "
               f"acceptance {st['acceptance_rate']:.2f} "
@@ -160,7 +213,7 @@ def main():
               f"p99 {np.percentile(ttft, 99) * 1e3:.0f}ms "
               f"(finish reasons: "
               f"{sorted({r.finish_reason for r in done})})")
-    if args.cache == "paged":
+    if args.cache == "paged" and router is None:
         print(f"kv stats: {engine.kv_stats()}")
 
 

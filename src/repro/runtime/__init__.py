@@ -1,3 +1,6 @@
+from .cluster import (ROUTER_POLICIES, ClusterRouter, ReplicaOffer,
+                      ReplicaState, RouterHandle, get_router_policy)
+from .fault import FaultEvent, ReplicaFaultInjector
 from .sampling import SamplingParams
 from .scheduler import (ADMISSION_POLICIES, AdmissionPolicy,
                         get_admission_policy)
@@ -6,4 +9,7 @@ from .steps import (init_train_state, make_prefill_step, make_serve_step,
 
 __all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
            "init_train_state", "SamplingParams", "AdmissionPolicy",
-           "ADMISSION_POLICIES", "get_admission_policy"]
+           "ADMISSION_POLICIES", "get_admission_policy",
+           "ClusterRouter", "ReplicaState", "ReplicaOffer", "RouterHandle",
+           "ROUTER_POLICIES", "get_router_policy",
+           "FaultEvent", "ReplicaFaultInjector"]

@@ -1,0 +1,622 @@
+"""Fault-tolerant multi-replica serving: an offer-based cluster router.
+
+The serving mirror of the seed's Mesos half (``core/cluster.py`` +
+``core/scheduler.py``): each ``ServeEngine`` replica is a Scylla
+framework task, and the ``ClusterRouter`` is the framework scheduler in
+front of the pool.  Every router tick:
+
+1. **Offers** — each placeable replica advertises ``ReplicaOffer(free
+   slots, free KV pages, queue depth)`` (``ServeEngine.offer()``, the
+   ``Cluster.advertise`` analogue).
+2. **Health** — replicas heartbeat; ``miss_threshold`` consecutive
+   misses mark a replica ``LOST`` (``ScyllaScheduler.on_host_failure``'s
+   serving twin).  A LOST replica is *fenced* — its engine is discarded
+   so a zombie (e.g. a partitioned replica that kept stepping) can never
+   emit into a stream the router has already re-placed.
+3. **Recovery** — every in-flight request on a lost replica re-enters
+   the router queue at the FRONT and resumes on a surviving replica by
+   **deterministic replay**: the prompt is extended with the tokens the
+   client already received and re-prefilled, and PR 3's position-folded
+   sampling makes the continuation bitwise-identical to the uninterrupted
+   stream (greedy and seeded-sampled alike — gated in
+   ``tests/test_cluster_serve.py``).  Each recovery consumes one unit of
+   the request's ``retry_budget`` and backs off exponentially
+   (``backoff_ticks * 2**(retries-1)``) before re-placement.
+4. **Placement** — queued requests are placed through a registered
+   ``RouterPolicy`` (``pack``/``spread``, mirroring
+   ``core/policies.get_policy``): ``pack`` fills the busiest fitting
+   replica (consolidate; keeps spare replicas drainable), ``spread``
+   targets the emptiest (load-balance; the throughput default).
+5. **Stepping** — each live replica runs one engine tick under a
+   ``runtime.fault.StepWatchdog``; a flagged straggler is routed around
+   (no new placements) until ``slow_cooldown`` ticks pass without a new
+   flag.
+
+Brown-out degradation: while any replica is LOST or flagged slow, the
+pool is degraded and the router switches placement to strict weighted
+order — requests from higher-``tenant_weights`` tiers (gold) place
+first, and a lower tier only places once every higher-tier request has
+(head-of-line).  Free-tier load is thereby shed exactly while capacity
+is reduced, protecting the gold SLO; nothing is dropped — shed requests
+simply wait for capacity to recover or the gold backlog to drain.
+
+Chaos is injected through ``runtime.fault.ReplicaFaultInjector`` — a
+seeded, reproducible schedule of kill / rejoin / stall / heartbeat-drop
+/ page-pressure / drain events — so every chaos run can be compared
+bitwise against its fault-free twin (``benchmarks/cluster_serve.py``).
+"""
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+from repro.runtime.fault import ReplicaFaultInjector, StepWatchdog
+from repro.runtime.serve import Request, RequestState, ServeStalled
+
+__all__ = ["ClusterRouter", "ReplicaHandle", "ReplicaOffer", "ReplicaState",
+           "RouterHandle", "RouterPolicy", "ROUTER_POLICIES",
+           "get_router_policy", "reset_for_replay"]
+
+
+class ReplicaState(enum.Enum):
+    UP = "up"            # serving; offers flow
+    DRAINING = "draining"  # no new placements; in-flight finishes
+    LOST = "lost"        # failed the heartbeat threshold; fenced
+    DOWN = "down"        # drained out (or never joined); awaiting rejoin
+
+
+@dataclass(frozen=True)
+class ReplicaOffer:
+    """One replica's advertised free resources for this router tick."""
+
+    replica: int
+    free_slots: int
+    free_pages: Optional[int]  # None: dense cache (slots only)
+    page_size: Optional[int]
+    queue_depth: int
+
+
+# ---------------------------------------------------------------- policies
+class RouterPolicy:
+    """Chooses which offering replica a queued request is placed on
+    (registered in ``ROUTER_POLICIES``, mirroring
+    ``core/policies.POLICIES``)."""
+
+    name = "base"
+
+    def select(self, offers: list) -> ReplicaOffer:
+        """Pick from ``offers`` (every entry already fits the request)."""
+        raise NotImplementedError
+
+
+class PackRouterPolicy(RouterPolicy):
+    """Fewest free slots first: consolidate load onto already-busy
+    replicas so spare ones stay empty (cheap to drain, instant headroom
+    for recovery bursts) — the serving analogue of ``minhost``."""
+
+    name = "pack"
+
+    def select(self, offers):
+        return min(offers, key=lambda o: (o.free_slots, o.queue_depth,
+                                          o.replica))
+
+
+class SpreadRouterPolicy(RouterPolicy):
+    """Most free slots first (shallowest backlog on ties): classic load
+    balancing — keeps per-replica batch pressure even, the throughput
+    default."""
+
+    name = "spread"
+
+    def select(self, offers):
+        return min(offers, key=lambda o: (-o.free_slots, o.queue_depth,
+                                          o.replica))
+
+
+ROUTER_POLICIES = {
+    "pack": PackRouterPolicy,
+    "spread": SpreadRouterPolicy,
+}
+
+
+def get_router_policy(name) -> RouterPolicy:
+    if isinstance(name, RouterPolicy):
+        return name
+    return ROUTER_POLICIES[name]()
+
+
+# ----------------------------------------------------------------- replay
+def reset_for_replay(req: Request) -> Request:
+    """Rewind a request recovered from a dead replica into a submittable
+    replay: the prompt absorbs every token the client already received
+    (``output`` keeps them, so ``max_new_tokens`` accounting and stop
+    sequences spanning the recovery boundary stay exact), and every
+    engine-private field is cleared — in particular ``_preempted`` /
+    ``_ckpt_pages``, which would otherwise point a fresh engine at the
+    dead engine's page pool.
+
+    Re-prefilling ``prompt + emitted`` continues the stream bitwise: the
+    prefill samples at absolute position ``len(prompt') - 1`` with the
+    request's own key — exactly the fold the lost replica's next decode
+    step would have used.
+    """
+    emitted = np.asarray(req.output, np.int32)
+    if emitted.size:
+        req.prompt = np.concatenate(
+            [np.asarray(req.prompt, np.int32), emitted])
+    req.done = False
+    req.state = RequestState.QUEUED
+    req.finish_reason = None
+    req._feed = None
+    req._ckpt = None
+    req._ckpt_pages = None
+    req._preempted = False
+    req._drf_charged = None
+    return req
+
+
+# ---------------------------------------------------------------- replicas
+class ReplicaHandle:
+    """Router-side view of one engine replica: lifecycle state, health
+    counters, the straggler watchdog, and the live fault-injection
+    toggles the ``ReplicaFaultInjector`` flips."""
+
+    def __init__(self, rid: int, make_engine: Callable[[int], object]):
+        self.rid = rid
+        self._make_engine = make_engine
+        self.engine = make_engine(rid)
+        self.state = ReplicaState.UP
+        self.misses = 0
+        self.slow = False
+        self.slow_until = -1
+        self.watchdog = StepWatchdog()
+        # fault-injection state
+        self.killed = False
+        self.stall_s = 0.0
+        self.stall_until = -1
+        self.hbdrop_until = -1
+        self._pressure: list = []  # (release_tick, held_pages)
+        # telemetry
+        self.placements = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------ health
+    def heartbeat(self, tick: int) -> bool:
+        """Did this replica's beat arrive this tick?"""
+        return not self.killed and tick > self.hbdrop_until
+
+    def fence(self) -> None:
+        """Discard the engine: a fenced replica can never write another
+        token into a stream the router re-owns (zombie isolation)."""
+        self.engine = None
+        self.killed = True
+
+    def rejoin(self, tick: int) -> None:
+        """Fresh engine, clean health state (prefix cache and KV start
+        cold — recovery correctness never depends on rejoined state)."""
+        self.engine = self._make_engine(self.rid)
+        self.state = ReplicaState.UP
+        self.killed = False
+        self.misses = 0
+        self.slow = False
+        self.slow_until = -1
+        self.stall_s = 0.0
+        self.stall_until = -1
+        self.hbdrop_until = -1
+        self._pressure = []
+        self.watchdog = StepWatchdog()
+
+    # ------------------------------------------------------------ offers
+    def placeable(self, tick: int) -> bool:
+        return (self.state is ReplicaState.UP and not self.killed
+                and not self.slow and self.engine is not None)
+
+    def offer(self) -> Optional[ReplicaOffer]:
+        if self.engine is None:
+            return None
+        raw = self.engine.offer()
+        return ReplicaOffer(replica=self.rid, **raw)
+
+    def can_accept(self, req: Request) -> bool:
+        return self.engine is not None and self.engine.can_accept(req)
+
+    # ---------------------------------------------------------- stepping
+    def step(self, tick: int) -> int:
+        """One engine tick under the watchdog; returns tokens emitted.
+        A scheduled stall sleeps first — the watchdog sees the inflated
+        wall time exactly as it would a genuinely straggling host."""
+        if self.engine is None:
+            return 0
+        if tick <= self.stall_until and self.stall_s > 0:
+            time.sleep(self.stall_s)
+        flagged_before = len(self.watchdog.flagged)
+        self.watchdog.start()
+        emitted = self.engine.step()
+        self.watchdog(tick, None)
+        self.steps += 1
+        if len(self.watchdog.flagged) > flagged_before:
+            self.slow = True
+        return emitted
+
+    # ----------------------------------------------------- page pressure
+    def apply_pressure(self, tick: int, fraction: float, ticks: int):
+        eng = self.engine
+        if eng is None or eng.kv is None:
+            return
+        n = int(eng.kv.pool.available * min(max(fraction, 0.0), 1.0))
+        if n:
+            self._pressure.append((tick + ticks, eng.kv.pool.alloc(n)))
+
+    def release_pressure(self, tick: int):
+        keep = []
+        for release_tick, pages in self._pressure:
+            if tick >= release_tick and self.engine is not None:
+                for pg in pages:
+                    self.engine.kv.pool.decref(pg)
+            else:
+                keep.append((release_tick, pages))
+        self._pressure = keep
+
+
+# ------------------------------------------------------------------ router
+@dataclass
+class _RouterRequest:
+    """Router-side bookkeeping for one submitted request."""
+
+    req: Request
+    seq: int                      # arrival order (FIFO key)
+    t_submit: float               # router wall-clock submit stamp
+    retries: int = 0              # recoveries consumed so far
+    not_before: int = 0           # backoff: earliest placement tick
+    replica: Optional[int] = None  # where it currently runs
+    history: list = field(default_factory=list)  # replica ids tried
+
+
+class RouterHandle:
+    """Caller-facing view of a router-submitted request (the cluster
+    twin of ``runtime.serve.RequestHandle``): ``tokens()`` streams the
+    output, driving router ticks while the next token is pending."""
+
+    def __init__(self, rr: _RouterRequest, router: "ClusterRouter"):
+        self._rr = rr
+        self.req = rr.req
+        self._router = router
+
+    @property
+    def done(self) -> bool:
+        return self.req.done
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        return self.req.finish_reason
+
+    @property
+    def output(self) -> list:
+        return list(self.req.output)
+
+    @property
+    def retries(self) -> int:
+        return self._rr.retries
+
+    def tokens(self, max_ticks: int = 100_000) -> Iterator[int]:
+        i = stalled = 0
+        while True:
+            while i < len(self.req.output):
+                stalled = 0
+                yield self.req.output[i]
+                i += 1
+            if self.req.done:
+                return
+            self._router.step()
+            stalled += 1
+            if stalled > max_ticks:
+                raise ServeStalled(
+                    f"request {self.req.req_id} produced no token in "
+                    f"{max_ticks} router ticks "
+                    f"(state={self.req.state.value})")
+
+    def result(self, max_ticks: int = 100_000) -> Request:
+        for _ in self.tokens(max_ticks=max_ticks):
+            pass
+        return self.req
+
+    def metrics(self) -> dict:
+        """TTFT against the ROUTER submit stamp (engine restamps
+        ``t_submit`` on replay; the router's is the client's)."""
+        out = {"retries": self._rr.retries}
+        if self.req.t_first is not None:
+            out["ttft_s"] = self.req.t_first - self._rr.t_submit
+        return out
+
+
+class ClusterRouter:
+    """Offer-based router over ``n_replicas`` engine replicas.
+
+    ``make_engine(rid)`` builds one replica's ``ServeEngine`` (replicas
+    over the same model share compiled steps through the
+    ``runtime.steps`` module LRU, so N replicas cost one compile).  See
+    the module docstring for the tick protocol; knobs:
+
+    * ``policy``          — ``ROUTER_POLICIES`` name (or instance).
+    * ``miss_threshold``  — consecutive heartbeat misses before LOST.
+    * ``retry_budget``    — recoveries per request before it is failed
+      (``finish_reason="failed"``; never silently dropped).
+    * ``backoff_ticks``   — base of the per-request exponential backoff
+      between recovery and re-placement.
+    * ``tenant_weights``  — SLO tiers for brown-out shedding (and passed
+      by callers to each engine's weighted-DRF scheduler).
+    * ``injector``        — optional ``ReplicaFaultInjector`` schedule.
+    * ``slow_cooldown``   — flag-free ticks before a slow replica
+      re-enters the placement set.
+    """
+
+    def __init__(self, make_engine: Callable[[int], object],
+                 n_replicas: int, *, policy="spread",
+                 miss_threshold: int = 3, retry_budget: int = 3,
+                 backoff_ticks: int = 2, tenant_weights: Optional[dict] = None,
+                 injector: Optional[ReplicaFaultInjector] = None,
+                 slow_cooldown: int = 20):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1: {n_replicas}")
+        if miss_threshold < 1:
+            raise ValueError(f"miss_threshold must be >= 1: "
+                             f"{miss_threshold}")
+        self.policy = get_router_policy(policy)
+        self.miss_threshold = miss_threshold
+        self.retry_budget = retry_budget
+        self.backoff_ticks = backoff_ticks
+        self.tenant_weights = dict(tenant_weights or {})
+        self.injector = injector
+        self.slow_cooldown = slow_cooldown
+        self.replicas = [ReplicaHandle(i, make_engine)
+                         for i in range(n_replicas)]
+        self.tick_count = 0
+        self.queue: list[_RouterRequest] = []
+        self.placed: dict[int, list[_RouterRequest]] = {
+            r.rid: [] for r in self.replicas}
+        self.finished: list[_RouterRequest] = []
+        self._seq = 0
+        self._handles: list[RouterHandle] = []
+        # telemetry
+        self.recoveries = 0        # requests recovered off lost replicas
+        self.replicas_lost = 0
+        self.failed = 0            # retry budget exhausted
+        self.brownout_ticks = 0
+
+    # ------------------------------------------------------------- submit
+    def submit(self, req: Request) -> RouterHandle:
+        rr = _RouterRequest(req=req, seq=self._seq,
+                            t_submit=time.perf_counter())
+        self._seq += 1
+        self.queue.append(rr)
+        h = RouterHandle(rr, self)
+        self._handles.append(h)
+        return h
+
+    # ------------------------------------------------------------- health
+    def _weight(self, tenant: str) -> float:
+        return float(self.tenant_weights.get(tenant, 1.0))
+
+    def degraded(self) -> bool:
+        """Capacity below nominal: any replica LOST, undetected-dead, or
+        flagged slow.  (Operator drains are intended capacity changes
+        and do not trigger brown-out shedding.)"""
+        return any(r.state is ReplicaState.LOST or r.killed or r.slow
+                   for r in self.replicas
+                   if r.state is not ReplicaState.DOWN)
+
+    def _mark_lost(self, rh: ReplicaHandle) -> None:
+        rh.state = ReplicaState.LOST
+        rh.fence()
+        self.replicas_lost += 1
+        # recover every in-flight request: FRONT of the queue, newest
+        # last, so recovered work resumes before fresh arrivals place
+        victims = self.placed[rh.rid]
+        self.placed[rh.rid] = []
+        for rr in reversed(victims):
+            if rr.req.done:
+                self.finished.append(rr)
+                continue
+            rr.retries += 1
+            rr.replica = None
+            if rr.retries > self.retry_budget:
+                rr.req.done = True
+                rr.req.state = RequestState.FINISHED
+                rr.req.finish_reason = "failed"
+                rr.req.t_finish = time.perf_counter()
+                self.failed += 1
+                self.finished.append(rr)
+                continue
+            reset_for_replay(rr.req)
+            rr.not_before = (self.tick_count
+                             + self.backoff_ticks * 2 ** (rr.retries - 1))
+            self.queue.insert(0, rr)
+            self.recoveries += 1
+
+    def _heartbeats(self) -> None:
+        for rh in self.replicas:
+            if rh.state not in (ReplicaState.UP, ReplicaState.DRAINING):
+                continue
+            if rh.heartbeat(self.tick_count):
+                rh.misses = 0
+            else:
+                rh.misses += 1
+                if rh.misses >= self.miss_threshold:
+                    self._mark_lost(rh)
+
+    # ---------------------------------------------------------- lifecycle
+    def drain(self, rid: int) -> None:
+        """Stop placing on ``rid``; it leaves the pool once in-flight
+        work finishes (``DOWN``)."""
+        rh = self.replicas[rid]
+        if rh.state is ReplicaState.UP:
+            rh.state = ReplicaState.DRAINING
+
+    def rejoin(self, rid: int) -> None:
+        rh = self.replicas[rid]
+        if rh.state in (ReplicaState.LOST, ReplicaState.DOWN):
+            rh.rejoin(self.tick_count)
+        elif rh.state is ReplicaState.DRAINING:
+            rh.state = ReplicaState.UP
+
+    # ------------------------------------------------------------- faults
+    def _apply_event(self, ev) -> None:
+        rh = self.replicas[ev.replica]
+        if ev.action == "kill":
+            rh.killed = True  # beats stop; detection via miss threshold
+        elif ev.action == "rejoin":
+            self.rejoin(ev.replica)
+        elif ev.action == "stall":
+            rh.stall_s = ev.arg
+            rh.stall_until = self.tick_count + ev.ticks
+        elif ev.action == "hbdrop":
+            rh.hbdrop_until = self.tick_count + ev.ticks - 1
+        elif ev.action == "pressure":
+            rh.apply_pressure(self.tick_count, ev.arg, ev.ticks)
+        elif ev.action == "drain":
+            self.drain(ev.replica)
+
+    # ---------------------------------------------------------- placement
+    def _placement_order(self) -> list:
+        """Brown-out: strict weighted order (gold first) with FIFO
+        within a tier; full capacity: plain FIFO."""
+        if self.degraded():
+            return sorted(self.queue,
+                          key=lambda rr: (-self._weight(rr.req.tenant),
+                                          rr.seq))
+        return list(self.queue)
+
+    def _place(self) -> None:
+        candidates = [rh for rh in self.replicas
+                      if rh.placeable(self.tick_count)]
+        # a slow replica still serves its in-flight work, but only
+        # receives new load when no healthy replica can take it
+        fallback = [rh for rh in self.replicas
+                    if rh.state is ReplicaState.UP and rh.slow
+                    and not rh.killed and rh.engine is not None]
+        for rr in self._placement_order():
+            if rr.not_before > self.tick_count:
+                continue  # backing off; doesn't block the line
+            rh = self._select_replica(rr.req, candidates) \
+                or self._select_replica(rr.req, fallback)
+            if rh is None:
+                # head-of-line: preserves FIFO fairness, and under
+                # brown-out it is exactly the shed — a free-tier request
+                # never jumps a gold one that is still waiting
+                break
+            rh.engine.submit(rr.req)
+            rh.placements += 1
+            rr.replica = rh.rid
+            rr.history.append(rh.rid)
+            self.queue.remove(rr)
+            self.placed[rh.rid].append(rr)
+
+    def _select_replica(self, req: Request,
+                        pool: list) -> Optional[ReplicaHandle]:
+        fitting = [rh.offer() for rh in pool if rh.can_accept(req)]
+        if not fitting:
+            return None
+        return self.replicas[self.policy.select(fitting).replica]
+
+    # ------------------------------------------------------------ harvest
+    def _harvest(self) -> None:
+        for rh in self.replicas:
+            still = []
+            for rr in self.placed[rh.rid]:
+                if rr.req.done:
+                    self.finished.append(rr)
+                else:
+                    still.append(rr)
+            self.placed[rh.rid] = still
+            if rh.state is ReplicaState.DRAINING and not still:
+                rh.state = ReplicaState.DOWN
+                rh.engine = None
+
+    # ------------------------------------------------------------- ticking
+    def step(self) -> int:
+        """One router tick; returns tokens emitted across the pool."""
+        self.tick_count += 1
+        if self.injector is not None:
+            for ev in self.injector.pop(self.tick_count):
+                self._apply_event(ev)
+        for rh in self.replicas:
+            rh.release_pressure(self.tick_count)
+        self._heartbeats()
+        if self.degraded():
+            self.brownout_ticks += 1
+        self._place()
+        emitted = 0
+        for rh in self.replicas:
+            if rh.state not in (ReplicaState.UP, ReplicaState.DRAINING):
+                continue
+            if rh.killed or rh.engine is None:
+                continue
+            if self.placed[rh.rid] or rh.engine.queue:
+                emitted += rh.step(self.tick_count)
+            if rh.slow and self.tick_count >= rh.slow_until:
+                # cooldown runs from the most recent flag
+                if rh.watchdog.flagged:
+                    last_flag = rh.watchdog.flagged[-1][0]
+                    rh.slow_until = last_flag + self.slow_cooldown
+                    if self.tick_count >= rh.slow_until:
+                        rh.slow = False
+                else:
+                    rh.slow = False
+        self._harvest()
+        return emitted
+
+    def run(self, max_ticks: int = 10_000,
+            on_stall: str = "raise") -> list[Request]:
+        """Drive ticks until every submitted request is done (finished
+        or failed).  Stalls are reported, never silently truncated —
+        same contract as ``ServeEngine.run``."""
+        import warnings
+
+        if on_stall not in ("raise", "warn"):
+            raise ValueError(f"on_stall must be 'raise' or 'warn': "
+                             f"{on_stall!r}")
+        ticks = 0
+        while self.queue or any(self.placed[r.rid] for r in self.replicas):
+            if ticks >= max_ticks:
+                queued = len(self.queue)
+                live = sum(len(v) for v in self.placed.values())
+                msg = (f"ClusterRouter.run() exhausted {max_ticks} ticks "
+                       f"with {queued + live} requests undrained "
+                       f"({queued} queued, {live} in flight)")
+                if on_stall == "raise":
+                    raise ServeStalled(msg)
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
+                break
+            self.step()
+            ticks += 1
+        out = [rr.req for rr in
+               sorted(self.finished, key=lambda rr: rr.seq)]
+        self.finished = []
+        return out
+
+    # ---------------------------------------------------------- telemetry
+    def stats(self) -> dict:
+        return {
+            "replicas": {
+                rh.rid: {"state": rh.state.value, "slow": rh.slow,
+                         "placements": rh.placements, "steps": rh.steps,
+                         "flags": len(rh.watchdog.flagged)}
+                for rh in self.replicas},
+            "ticks": self.tick_count,
+            "recoveries": self.recoveries,
+            "replicas_lost": self.replicas_lost,
+            "failed": self.failed,
+            "brownout_ticks": self.brownout_ticks,
+            "queued": len(self.queue),
+        }
+
+    def request_metrics(self) -> list[dict]:
+        """Per-request router-level metrics (TTFT vs the router submit
+        stamp survives replays; the engine's restamp does not)."""
+        return [dict(req_id=h.req.req_id, tenant=h.req.tenant,
+                     finish_reason=h.req.finish_reason, **h.metrics())
+                for h in self._handles]

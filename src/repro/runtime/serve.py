@@ -967,6 +967,47 @@ class ServeEngine:
             self._maybe_stop(s)
         return emitted
 
+    # --------------------------------------------------------- cluster hooks
+    def free_slots(self) -> int:
+        """Slots a router may target right now: parked slots minus the
+        queue the engine already owes admissions to (queued requests
+        claim freed slots before any new placement lands)."""
+        return max(0, sum(r is None for r in self.active)
+                   - len(self.scheduler.queue))
+
+    def offer(self) -> dict:
+        """Resource offer for a cluster router (the Mesos ``advertise``
+        analogue, per engine replica): free decode slots, free KV pages
+        (``None`` for the dense cache — slots are the only currency),
+        and the backlog depth a placement would queue behind."""
+        return {
+            "free_slots": self.free_slots(),
+            "free_pages": (None if self.kv is None
+                           else self.kv.pool.available),
+            "page_size": None if self.kv is None else self.kv.page_size,
+            "queue_depth": len(self.scheduler.queue),
+        }
+
+    def live_requests(self) -> list:
+        """Every unfinished request this engine holds — running slots
+        plus its admission queue (which includes PREEMPTED requests
+        waiting to resume).  A router recovering a lost replica replays
+        exactly this set."""
+        return ([r for r in self.active if r is not None]
+                + [r for r in self.queue])
+
+    def can_accept(self, req: Request) -> bool:
+        """Could a router place ``req`` here without queuing it behind
+        backpressure?  Host-side sizing only (free slot + page fit);
+        optimistic across multiple placements in one tick — the engine's
+        own scheduler absorbs any overshoot as ordinary backpressure."""
+        if self.free_slots() < 1:
+            return False
+        if self.kv is not None:
+            return (self.kv.fits_ever(len(req.prompt), req.max_new_tokens)
+                    and self.kv.fits_now(req.prompt, req.max_new_tokens))
+        return 0 < len(req.prompt) < self.max_len
+
     # ------------------------------------------------------------- metrics
     def kv_reserved_bytes(self) -> int:
         """HBM bytes held by the KV cache (dense stripes or page pools)."""

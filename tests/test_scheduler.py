@@ -162,6 +162,91 @@ def test_compile_cache_warm_launch():
     assert warm < cold / 5
 
 
+# ------------------------------------------------- failure conservation
+def _chips_conserved(sched):
+    """No allocation leaks anywhere in the accounting stack: cluster
+    used == sum over running gangs == DRF charges, per-host books
+    balance, and dead hosts hold nothing."""
+    running_chips = sum(sum(js.assignment.values())
+                        for js in sched.running.values())
+    assert sched.cluster.used().chips == running_chips
+    for host in sched.cluster.hosts.values():
+        assert host.used_chips == sum(host.jobs.values())
+        assert 0 <= host.used_chips <= host.agent.capacity.chips
+        if not host.alive:
+            assert not host.jobs
+    drf_chips = sum(acct.allocated.chips
+                    for acct in sched.drf.accounts.values())
+    assert drf_chips == running_chips
+    for js in sched.running.values():
+        # gangs stay whole: a surviving job holds its full allocation
+        assert sum(js.assignment.values()) == js.spec.chips
+
+
+def _kill_sequence(sched, ops, now=0.0):
+    """Drive submit/schedule/kill/heal/finish ops, checking conservation
+    after every transition (not just at the end)."""
+    hosts = sorted(sched.cluster.hosts)
+    for i, (kind, arg) in enumerate(ops):
+        now += 1.0
+        if kind == "submit":
+            sched.submit(_job(f"j{i}", chips=arg,
+                              framework=f"fw{arg % 3}"), now)
+            sched.try_schedule(now)
+        elif kind == "kill":
+            sched.on_host_failure(hosts[arg % len(hosts)], now)
+        elif kind == "heal":
+            sched.cluster.heal_host(hosts[arg % len(hosts)])
+            sched.try_schedule(now)
+        elif kind == "finish":
+            if sched.running:
+                jid = sorted(sched.running)[arg % len(sched.running)]
+                sched.finish(jid, now)
+        _chips_conserved(sched)
+
+
+def test_host_failure_requeue_conserves_chips_seeded():
+    """Deterministic always-on twin of the hypothesis sweep below."""
+    import numpy as np
+
+    rng = np.random.default_rng(1234)
+    for _ in range(5):
+        sched = ScyllaScheduler(Cluster(SMALL), co_schedule=True)
+        ops = [("submit", int(rng.integers(1, 17))) for _ in range(4)]
+        for _ in range(12):
+            kind = ("kill", "heal", "finish",
+                    "submit")[int(rng.integers(0, 4))]
+            arg = int(rng.integers(0, 16))
+            ops.append((kind, arg if kind != "submit"
+                        else max(1, arg % 12)))
+        _kill_sequence(sched, ops)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    _OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(1, 16)),
+            st.tuples(st.just("kill"), st.integers(0, 7)),
+            st.tuples(st.just("heal"), st.integers(0, 7)),
+            st.tuples(st.just("finish"), st.integers(0, 7))),
+        min_size=1, max_size=24)
+
+    @pytest.mark.slow
+    @settings(max_examples=60, deadline=None)
+    @given(ops=_OPS)
+    def test_host_failure_requeue_conserves_chips_hypothesis(ops):
+        """`on_host_failure` + evict/requeue never leaks an allocation:
+        for ANY interleaving of submits, host kills, heals, and
+        finishes, every accounting layer (cluster, hosts, DRF, gangs)
+        stays exactly balanced."""
+        _kill_sequence(ScyllaScheduler(Cluster(SMALL), co_schedule=True),
+                       ops)
+
+
 def test_scheduler_recommends_layout_from_profile():
     """§Perf H3 integrated: small models get the pure-DP layout, big
     models keep TP — the paper's profile-follows-placement idea applied
