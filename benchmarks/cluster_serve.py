@@ -22,6 +22,13 @@ later rejoins).  The gate asserts, in-process and machine-independent:
 * brown-out honors the SLO tiers: gold p99 TTFT <= free p99 TTFT while
   capacity is degraded (weighted shedding protects gold).
 
+The chaos run is additionally served with full telemetry on: its Chrome
+trace-event JSON is written to ``artifacts/chaos_trace.json``
+(Perfetto-viewable — the fence, REPLAY spans, and re-placement are all
+visible on the router track), the flight recorder dumps on the fence,
+and the gate asserts the recovery left >= 1 REPLAY span with every span
+closed and the trace structurally valid.
+
     PYTHONPATH=src python benchmarks/cluster_serve.py [--dry]
 
 Emits BENCH_cluster_serve[_dry].json via ``common.emit_json``;
@@ -51,6 +58,7 @@ from repro.runtime.cluster import ClusterRouter
 from repro.runtime.fault import FaultEvent, ReplicaFaultInjector
 from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
                                  ServeEngine)
+from repro.runtime.telemetry import Telemetry, validate_chrome_trace
 
 TENANT_WEIGHTS = {"gold": 3.0, "free": 1.0}
 
@@ -77,7 +85,7 @@ def fresh(reqs):
 
 
 def run_pool(model, params, reqs, *, n_replicas, slots, max_len,
-             injector=None, cache="dense"):
+             injector=None, cache="dense", telemetry=None):
     def make_engine(rid):
         return ServeEngine(model, params, ServeConfig(
             batch_slots=slots, max_len=max_len, cache=cache, page_size=8,
@@ -86,7 +94,7 @@ def run_pool(model, params, reqs, *, n_replicas, slots, max_len,
 
     router = ClusterRouter(make_engine, n_replicas, policy="spread",
                            tenant_weights=TENANT_WEIGHTS,
-                           injector=injector)
+                           injector=injector, telemetry=telemetry)
     handles = [router.submit(r) for r in reqs]
     t0 = time.perf_counter()
     done = router.run(max_ticks=20_000)
@@ -154,9 +162,13 @@ def run(dry: bool = True, slots: int = 2, max_len: int = 96):
     ])
     clean = run_pool(model, params, fresh(reqs), n_replicas=3,
                      slots=slots, max_len=max_len, cache="paged")
+    # the chaos run is fully traced: the Chrome-trace JSON (Perfetto-
+    # viewable) lands in artifacts/, the armed flight recorder dumps on
+    # the fence, and the gate counts the REPLAY spans the recovery opened
+    tm = Telemetry(trace=True, flight=512, flight_dir="artifacts")
     chaos = run_pool(model, params, fresh(reqs), n_replicas=3,
                      slots=slots, max_len=max_len, cache="paged",
-                     injector=injector)
+                     injector=injector, telemetry=tm)
     st = chaos["stats"]
     results["chaos"] = {
         k: chaos[k] for k in ("requests", "tokens", "wall_s", "tok_per_s",
@@ -165,6 +177,19 @@ def run(dry: bool = True, slots: int = 2, max_len: int = 96):
     results["chaos"].update(
         recoveries=st["recoveries"], replicas_lost=st["replicas_lost"],
         brownout_ticks=st["brownout_ticks"], failed=st["failed"])
+    trace_path = tm.write_trace(os.path.join("artifacts",
+                                             "chaos_trace.json"))
+    v = validate_chrome_trace(trace_path)
+    results["chaos"].update(
+        replay_spans=sum(1 for e in tm.trace.events
+                         if e.get("ph") == "B" and e.get("name") == "REPLAY"),
+        trace_events=tm.trace.total,
+        spans_balanced=not tm.trace.open_spans(),
+        trace_valid=bool(v["balanced"]),
+        flight_dumps=list(tm.flight_dumps))
+    print(f"chaos trace: {tm.trace.total} events -> {trace_path}, "
+          f"{results['chaos']['replay_spans']} REPLAY spans, "
+          f"flight dumps {tm.flight_dumps}")
     results["chaos_bitwise_identical"] = bool(
         chaos["outputs"] == clean["outputs"])
     for tier in ("gold", "free"):
@@ -194,6 +219,14 @@ def run(dry: bool = True, slots: int = 2, max_len: int = 96):
         "surviving replicas leaked KV pages after recovery"
     assert results["gold_p99_ttft_bounded"], \
         "brown-out shedding failed to protect the gold tier"
+    # observability gates: the recovery left a visible trail — at least
+    # one REPLAY span in the Chrome trace, every span closed, and the
+    # trace validates end-to-end
+    assert results["chaos"]["replay_spans"] >= 1, \
+        "chaos run traced no REPLAY spans"
+    assert results["chaos"]["spans_balanced"], \
+        "chaos run left trace spans open"
+    assert results["chaos"]["trace_valid"], "chaos trace failed validation"
     return results
 
 

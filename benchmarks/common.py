@@ -4,6 +4,45 @@ from __future__ import annotations
 import json
 import os
 import time
+from contextlib import contextmanager
+
+_REGISTRY = None
+
+
+def registry():
+    """The benchmark process's shared ``MetricsRegistry`` (lazy import —
+    callers put ``src/`` on ``sys.path`` before the first call).  Section
+    wall times, roofline fractions, etc. all land here, so a benchmark's
+    timing report is a registry read, not a second stopwatch."""
+    global _REGISTRY
+    if _REGISTRY is None:
+        from repro.runtime.telemetry import MetricsRegistry
+        _REGISTRY = MetricsRegistry()
+    return _REGISTRY
+
+
+@contextmanager
+def section(name: str):
+    """Time one benchmark section into the
+    ``bench_section_seconds{section=...}`` gauge.  Reports read back via
+    ``section_times()`` — the registry is the one source of wall time."""
+    reg = registry()
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        reg.gauge("bench_section_seconds",
+                  "wall seconds per benchmark section",
+                  ("section",)).labels(section=name).set(
+            time.perf_counter() - t0)
+
+
+def section_times() -> dict:
+    """{section: wall seconds} read from the registry."""
+    fam = registry().to_dict().get("bench_section_seconds")
+    if fam is None:
+        return {}
+    return {s["labels"]["section"]: s["value"] for s in fam["series"]}
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):

@@ -1,0 +1,174 @@
+"""Roofline-gated kernel counters: each serving kernel's achieved
+fraction of its analytic roofline, tracked and gated across PRs.
+
+For the three hot decode kernels — **dense decode** (``serve``),
+**paged decode** (``paged_serve``), **speculative verify**
+(``spec_serve``) — this lowers the exact compiled step the engine
+dispatches, feeds its HLO through ``launch/roofline.py``'s static
+analyzer (FLOPs + HBM traffic per step), converts the counts into the
+analytic per-step roofline bound, and divides by the measured per-step
+wall time:
+
+    achieved_fraction = roofline_step_s / measured_step_s
+
+The fraction is a *machine-tracked ratio*: the numerator is a pure
+function of the HLO (stable by construction), the denominator moves only
+when the kernel's real speed moves — so ``scripts/check_bench.py`` gates
+it exactly like a throughput rate (the ReFrame roofline regression-test
+idiom).  The analyzer's counters are additionally bound-checked here:
+every kernel must report positive FLOPs and HBM bytes, and the
+fraction must be positive — an analyzer regression (HLO format drift,
+a kernel falling out of the fusion the counts assume) fails in-process
+before any number is recorded.
+
+Fractions land in the benchmark registry as
+``kernel_roofline_fraction{kernel=...}`` gauges and per-section wall
+time comes from ``common.section`` (the registry is the stopwatch).
+
+    PYTHONPATH=src python benchmarks/kernel_roofline.py [--dry]
+
+Emits BENCH_kernel_roofline[_dry].json via ``common.emit_json``.
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # python -m benchmarks.kernel_roofline
+    from .common import emit_json, registry, section, section_times
+except ImportError:  # python benchmarks/kernel_roofline.py
+    sys.path.insert(0, os.path.dirname(__file__))
+    from common import emit_json, registry, section, section_times
+from repro.configs import get_config
+from repro.launch.roofline import analyze_hlo, roofline
+from repro.models import LM, RuntimeKnobs
+from repro.runtime.steps import compiled_step
+
+SLOTS = 4
+PAGE_SIZE = 16
+DRAFT_K = 3
+
+
+def _model(max_len):
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              num_layers=2, vocab_size=64)
+    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _measure(fn, params, caches, args, iters):
+    """Best-of-iters per-call wall time.  The step donates its caches,
+    so each call chains the previous call's output caches back in —
+    decode-in-place, exactly as the engine drives it."""
+    out, caches = fn(params, caches, *args)  # warmup + donate the init
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out, caches = fn(params, caches, *args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, caches
+
+
+def _kernel_case(model, params, kind, *, max_len, iters):
+    """(analysis, measured_s) for one serving kernel at a mid-stream
+    decode position — the steady-state shape the engine spends its
+    time in."""
+    B = SLOTS
+    pos_val = max_len // 2
+    pos = jnp.asarray(np.full(B, pos_val, np.int32))
+    rng = np.random.default_rng(0)
+    if kind == "serve":
+        caches = model.init_cache(B, max_len)
+        step = compiled_step(model, "serve")
+        args = (jnp.asarray(rng.integers(1, 64, (B, 1)).astype(np.int32)),
+                pos)
+    elif kind == "paged_serve":
+        max_pages = max_len // PAGE_SIZE
+        num_pages = B * max_pages + 1  # + the null page
+        caches = model.init_cache_paged(num_pages, PAGE_SIZE)
+        step = compiled_step(model, "paged_serve", page_size=PAGE_SIZE)
+        # every slot fully mapped onto distinct pages (page 0 = null)
+        table = (1 + np.arange(B * max_pages, dtype=np.int32)
+                 .reshape(B, max_pages))
+        args = (jnp.asarray(rng.integers(1, 64, (B, 1)).astype(np.int32)),
+                pos, jnp.asarray(table))
+    elif kind == "spec_serve":
+        caches = model.init_cache(B, max_len)
+        step = compiled_step(model, "spec_serve", draft_len=DRAFT_K)
+        feed = rng.integers(1, 64, (B, DRAFT_K + 1)).astype(np.int32)
+        args = (jnp.asarray(feed), pos)
+    else:
+        raise ValueError(kind)
+    hlo = step.lower(params, caches, *args).compile().as_text()
+    analysis = analyze_hlo(hlo)
+    measured_s, caches = _measure(step, params, caches, args, iters)
+    del caches
+    return analysis, measured_s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true")
+    args = ap.parse_args()
+    max_len = 64 if args.dry else 128
+    iters = 10 if args.dry else 30
+    model, params = _model(max_len)
+
+    cases = [("dense_decode", "serve"),
+             ("paged_decode", "paged_serve"),
+             ("spec_verify", "spec_serve")]
+    results = {}
+    frac_gauge = registry().gauge(
+        "kernel_roofline_fraction",
+        "achieved fraction of the analytic roofline", ("kernel",))
+    for name, kind in cases:
+        with section(name):
+            analysis, measured_s = _kernel_case(model, params, kind,
+                                                max_len=max_len,
+                                                iters=iters)
+        terms = roofline(analysis["flops"], analysis["hbm_bytes"],
+                         analysis, n_devices=1)
+        frac = terms["step_s"] / max(measured_s, 1e-12)
+        # analyzer bound-checks: a kernel with zero counted FLOPs or
+        # bytes means the HLO walk no longer sees the compute — fail
+        # loudly before recording a meaningless fraction
+        assert analysis["flops"] > 0, (name, "flops")
+        assert analysis["hbm_bytes"] > 0, (name, "hbm_bytes")
+        assert frac > 0, (name, frac)
+        frac_gauge.labels(kernel=name).set(frac)
+        results[name] = {
+            "flops": analysis["flops"],
+            "hbm_bytes": analysis["hbm_bytes"],
+            "bottleneck": terms["bottleneck"],
+            "roofline_step_s": terms["step_s"],
+            "measured_step_s": measured_s,
+            "achieved_fraction": frac,
+        }
+        print(f"{name}: {analysis['flops']:.3g} flops, "
+              f"{analysis['hbm_bytes']:.3g} HBM bytes, "
+              f"bound {terms['step_s'] * 1e6:.2f}us "
+              f"({terms['bottleneck']}), measured "
+              f"{measured_s * 1e6:.1f}us -> fraction {frac:.3g}")
+
+    # spec verify amortizes: its step scores DRAFT_K+1 tokens, so its
+    # per-TOKEN bound is tighter than dense decode's whenever the
+    # fraction ratio beats 1/(k+1) — recorded, not gated (machine lore)
+    results["spec_tokens_per_step"] = DRAFT_K + 1
+    results["max_len"] = max_len
+    results["slots"] = SLOTS
+    results["sections"] = section_times()
+    emit_json("kernel_roofline_dry" if args.dry else "kernel_roofline",
+              results)
+
+
+if __name__ == "__main__":
+    main()

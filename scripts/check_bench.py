@@ -42,7 +42,7 @@ import sys
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 DEFAULT_NAMES = ("serve_throughput", "paged_serve", "spec_decode",
-                 "cluster_serve")
+                 "cluster_serve", "kernel_roofline")
 
 # (json path into the payload, kind): kind "rate" = higher is better,
 # "latency" = lower is better, gated by the respective tolerance
@@ -72,6 +72,14 @@ METRICS = {
         (("tok_per_s_4",), "rate"),
         (("chaos", "tok_per_s"), "rate"),
     ],
+    # achieved roofline fractions: numerator is a pure function of the
+    # HLO, so the ratio regresses exactly when the kernel's real speed
+    # does (ROADMAP "roofline-gated" item)
+    "kernel_roofline": [
+        (("dense_decode", "achieved_fraction"), "rate"),
+        (("paged_decode", "achieved_fraction"), "rate"),
+        (("spec_verify", "achieved_fraction"), "rate"),
+    ],
 }
 
 # (json path, predicate, description): machine-independent share/shape
@@ -89,6 +97,10 @@ BOUNDS = {
          lambda v: v >= 1, "preemption fired under the SLO flood"),
         (("slo_flood", "weighted-preempt", "replay_bitwise_identical"),
          lambda v: bool(v), "preempted request replayed bitwise-identical"),
+        (("telemetry", "overhead_frac"), lambda v: v <= 0.02,
+         "full tracing costs <= 2% tokens/s (same-process pairwise)"),
+        (("telemetry", "spans_balanced"), lambda v: bool(v),
+         "traced run left no orphan spans"),
     ],
     "paged_serve": [],
     "spec_decode": [
@@ -121,6 +133,28 @@ BOUNDS = {
          "surviving replicas returned every KV page after recovery"),
         (("gold_p99_ttft_bounded",), lambda v: bool(v),
          "brown-out shedding kept gold p99 TTFT <= free p99 TTFT"),
+        (("chaos", "replay_spans"), lambda v: v >= 1,
+         "the chaos trace shows recovery as REPLAY spans"),
+        (("chaos", "spans_balanced"), lambda v: bool(v),
+         "chaos trace left no orphan spans (kill/replay close cleanly)"),
+        (("chaos", "trace_valid"), lambda v: bool(v),
+         "chaos Chrome-trace export validates (Perfetto-loadable)"),
+    ],
+    "kernel_roofline": [
+        (("dense_decode", "flops"), lambda v: v > 0,
+         "HLO analyzer counted compute for the dense decode kernel"),
+        (("dense_decode", "hbm_bytes"), lambda v: v > 0,
+         "HLO analyzer counted HBM traffic for the dense decode kernel"),
+        (("paged_decode", "flops"), lambda v: v > 0,
+         "HLO analyzer counted compute for the paged decode kernel"),
+        (("paged_decode", "hbm_bytes"), lambda v: v > 0,
+         "HLO analyzer counted HBM traffic for the paged decode kernel"),
+        (("dense_decode", "achieved_fraction"), lambda v: v > 0,
+         "dense decode achieved fraction is positive"),
+        (("paged_decode", "achieved_fraction"), lambda v: v > 0,
+         "paged decode achieved fraction is positive"),
+        (("spec_verify", "achieved_fraction"), lambda v: v > 0,
+         "speculative verify achieved fraction is positive"),
     ],
 }
 

@@ -80,6 +80,13 @@ smoke() {
         --tenant-weights "tenant-0=3,tenant-1=1" --preempt \
         --victim-policy lowest-weight-share-first
 
+    echo "== telemetry smoke (launcher --trace-out, then validate) =="
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 6 --slots 2 --max-len 64 --max-new 6 \
+        --trace-out artifacts/smoke_trace.json \
+        --metrics-out artifacts/smoke_metrics.prom
+    python -m repro.runtime.telemetry artifacts/smoke_trace.json
+
     echo "== speculative decode smoke (launcher, dense + paged) =="
     python -m repro.launch.serve --arch internlm2-1.8b --smoke \
         --requests 6 --slots 2 --max-len 64 --max-new 8 \
@@ -93,11 +100,18 @@ chaos() {
     echo "== cluster chaos smoke (kill 1 of 3 replicas mid-run) =="
     # the launcher exits nonzero if any request fails its retry budget,
     # so "zero lost requests" is asserted in-process
+    # fully telemetered: Chrome trace + metrics land in artifacts/ (CI
+    # uploads them on failure), the armed flight recorder dumps its ring
+    # on the fence, and the trace must validate with balanced spans
     python -m repro.launch.serve --arch internlm2-1.8b --smoke \
         --requests 9 --slots 2 --max-len 64 --max-new 8 \
         --replicas 3 --router-policy spread \
         --tenants 2 --tenant-weights "tenant-0=3,tenant-1=1" \
-        --fault-schedule "4:kill:1,24:rejoin:1" --miss-threshold 2
+        --fault-schedule "4:kill:1,24:rejoin:1" --miss-threshold 2 \
+        --trace-out artifacts/chaos_smoke_trace.json \
+        --metrics-out artifacts/chaos_smoke_metrics.json \
+        --flight-recorder 512
+    python -m repro.runtime.telemetry artifacts/chaos_smoke_trace.json
 
     echo "== cluster chaos smoke (seeded schedule, paged KV) =="
     python -m repro.launch.serve --arch internlm2-1.8b --smoke \

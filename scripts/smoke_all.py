@@ -1,13 +1,21 @@
-"""Quick dev loop: reduced-config fwd/loss/prefill/decode for every arch."""
+"""Quick dev loop: reduced-config fwd/loss/prefill/decode for every arch.
+
+Per-arch wall time is recorded into the shared telemetry registry
+(``smoke_arch_seconds{arch=...}``) and reported at the end — the same
+registry-as-stopwatch idiom the benchmarks use (benchmarks/common.py)."""
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import list_archs, get_config
 from repro.models import LM, RuntimeKnobs
+from repro.runtime.telemetry import MetricsRegistry
 
 B, S = 2, 32
+
+REGISTRY = MetricsRegistry()
 
 
 def run(arch):
@@ -36,12 +44,21 @@ def run(arch):
 if __name__ == "__main__":
     archs = sys.argv[1:] or list_archs()
     failures = []
+    gauge = REGISTRY.gauge("smoke_arch_seconds",
+                           "wall seconds per arch smoke", ("arch",))
     for a in archs:
+        t0 = time.perf_counter()
         try:
             run(a)
         except Exception as e:  # keep going, fail loudly at the end
             failures.append((a, e))
             print(f"{a:28s} FAIL {type(e).__name__}: {e}")
+        gauge.labels(arch=a).set(time.perf_counter() - t0)
+    times = {s["labels"]["arch"]: s["value"]
+             for s in REGISTRY.to_dict()["smoke_arch_seconds"]["series"]}
+    for a, dt in sorted(times.items(), key=lambda kv: -kv[1]):
+        print(f"  {a:28s} {dt:6.1f}s")
+    print(f"total {sum(times.values()):.1f}s over {len(times)} archs")
     if failures:
         print(f"{len(failures)}/{len(archs)} archs failed:",
               ", ".join(a for a, _ in failures))

@@ -27,6 +27,13 @@ weighted-DRF shares.
 tokens per slot per tick, ``--drafter`` from ``runtime.draft.DRAFTERS``);
 the run reports the draft acceptance rate alongside throughput.
 
+``--trace-out PATH`` records the full run as Chrome trace-event JSON
+(open it at https://ui.perfetto.dev); ``--metrics-out PATH`` writes the
+final metrics snapshot (``.prom`` = Prometheus text, else JSON);
+``--flight-recorder N`` arms a bounded flight recorder whose last N
+trace events + metrics are dumped to ``artifacts/`` automatically on a
+replica fence.  See docs/observability.md.
+
 ``--replicas N`` (N > 1, or any ``--fault-schedule``) fronts N engine
 replicas with a ``runtime.cluster.ClusterRouter``: requests are placed
 via ``--router-policy pack|spread`` offers, lost replicas are detected by
@@ -54,6 +61,7 @@ from repro.runtime.fault import ReplicaFaultInjector
 from repro.runtime.scheduler import ADMISSION_POLICIES, VICTIM_POLICIES
 from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
                                  ServeEngine)
+from repro.runtime.telemetry import Telemetry
 
 
 def parse_tenant_weights(spec: str) -> dict:
@@ -132,6 +140,15 @@ def main():
                     help="heartbeat misses before a replica is LOST")
     ap.add_argument("--retry-budget", type=int, default=3,
                     help="recovery replays per request before it fails")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's Chrome trace-event JSON here "
+                         "(Perfetto-viewable)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metrics snapshot here "
+                         "(.prom = Prometheus text, else JSON)")
+    ap.add_argument("--flight-recorder", type=int, default=0, metavar="N",
+                    help="arm the flight recorder: dump the last N trace "
+                         "events + metrics to artifacts/ on replica fence")
     args = ap.parse_args()
     if args.speculate and args.draft_k <= 0:
         ap.error(f"--speculate needs --draft-k >= 1 (got {args.draft_k})")
@@ -152,6 +169,9 @@ def main():
         draft_k=args.draft_k if args.speculate else 0,
         drafter=args.drafter)
 
+    tm = Telemetry(trace=bool(args.trace_out) or args.flight_recorder > 0,
+                   flight=args.flight_recorder, flight_dir="artifacts")
+
     # replicas share model/params; compiled steps dedupe via runtime.steps
     def make_engine(rid):
         return ServeEngine(model, params, serve_cfg)
@@ -165,9 +185,10 @@ def main():
                                miss_threshold=args.miss_threshold,
                                retry_budget=args.retry_budget,
                                tenant_weights=args.tenant_weights or {},
-                               injector=injector)
+                               injector=injector, telemetry=tm)
     else:
         engine = make_engine(0)
+        engine.bind_telemetry(tm, replica=0)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed)
@@ -215,6 +236,16 @@ def main():
               f"{sorted({r.finish_reason for r in done})})")
     if args.cache == "paged" and router is None:
         print(f"kv stats: {engine.kv_stats()}")
+    if args.trace_out:
+        path = tm.write_trace(args.trace_out)
+        tr = tm.trace
+        print(f"trace: {tr.total} events ({tr.dropped} dropped) -> {path} "
+              f"(open at https://ui.perfetto.dev)")
+    if args.metrics_out:
+        print(f"metrics: {len(tm.registry.names())} series -> "
+              f"{tm.write_metrics(args.metrics_out)}")
+    if tm.flight_dumps:
+        print(f"flight-recorder dumps: {tm.flight_dumps}")
 
 
 if __name__ == "__main__":

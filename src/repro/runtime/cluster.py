@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.runtime.fault import ReplicaFaultInjector, StepWatchdog
 from repro.runtime.serve import Request, RequestState, ServeStalled
+from repro.runtime.telemetry import ROUTER_PID, Telemetry
 
 __all__ = ["ClusterRouter", "ReplicaHandle", "ReplicaOffer", "ReplicaState",
            "RouterHandle", "RouterPolicy", "ROUTER_POLICIES",
@@ -165,10 +166,13 @@ class ReplicaHandle:
     counters, the straggler watchdog, and the live fault-injection
     toggles the ``ReplicaFaultInjector`` flips."""
 
-    def __init__(self, rid: int, make_engine: Callable[[int], object]):
+    def __init__(self, rid: int, make_engine: Callable[[int], object],
+                 telemetry: Optional[Telemetry] = None):
         self.rid = rid
         self._make_engine = make_engine
+        self.tm = telemetry
         self.engine = make_engine(rid)
+        self._bind_engine()
         self.state = ReplicaState.UP
         self.misses = 0
         self.slow = False
@@ -183,6 +187,14 @@ class ReplicaHandle:
         # telemetry
         self.placements = 0
         self.steps = 0
+
+    def _bind_engine(self) -> None:
+        """Rebind the (possibly fresh) engine onto the router's shared
+        telemetry sink: its series carry ``replica=rid`` labels, its
+        trace spans land on pid ``rid``.  Rejoin reuses the same labels
+        — the registry children are overwritten in place."""
+        if self.tm is not None and hasattr(self.engine, "bind_telemetry"):
+            self.engine.bind_telemetry(self.tm, replica=self.rid)
 
     # ------------------------------------------------------------ health
     def heartbeat(self, tick: int) -> bool:
@@ -199,6 +211,7 @@ class ReplicaHandle:
         """Fresh engine, clean health state (prefix cache and KV start
         cold — recovery correctness never depends on rejoined state)."""
         self.engine = self._make_engine(self.rid)
+        self._bind_engine()
         self.state = ReplicaState.UP
         self.killed = False
         self.misses = 0
@@ -359,7 +372,8 @@ class ClusterRouter:
                  miss_threshold: int = 3, retry_budget: int = 3,
                  backoff_ticks: int = 2, tenant_weights: Optional[dict] = None,
                  injector: Optional[ReplicaFaultInjector] = None,
-                 slow_cooldown: int = 20):
+                 slow_cooldown: int = 20,
+                 telemetry: Optional[Telemetry] = None):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1: {n_replicas}")
         if miss_threshold < 1:
@@ -372,7 +386,8 @@ class ClusterRouter:
         self.tenant_weights = dict(tenant_weights or {})
         self.injector = injector
         self.slow_cooldown = slow_cooldown
-        self.replicas = [ReplicaHandle(i, make_engine)
+        self.tm = telemetry if telemetry is not None else Telemetry()
+        self.replicas = [ReplicaHandle(i, make_engine, telemetry=self.tm)
                          for i in range(n_replicas)]
         self.tick_count = 0
         self.queue: list[_RouterRequest] = []
@@ -381,11 +396,42 @@ class ClusterRouter:
         self.finished: list[_RouterRequest] = []
         self._seq = 0
         self._handles: list[RouterHandle] = []
-        # telemetry
+        # counters stay plain attributes (hot, and tests poke them);
+        # the registry reads them live through function-backed gauges
+        # and stats() reads BACK through the registry
         self.recoveries = 0        # requests recovered off lost replicas
         self.replicas_lost = 0
         self.failed = 0            # retry budget exhausted
         self.brownout_ticks = 0
+        self._brownout_prev = False
+        reg = self.tm.registry
+        for name, help, fn in (
+                ("cluster_ticks", "router ticks stepped",
+                 lambda: self.tick_count),
+                ("cluster_recoveries", "requests recovered off lost "
+                 "replicas by deterministic replay",
+                 lambda: self.recoveries),
+                ("cluster_replicas_lost", "replicas fenced as LOST",
+                 lambda: self.replicas_lost),
+                ("cluster_failed", "requests failed on retry-budget "
+                 "exhaustion", lambda: self.failed),
+                ("cluster_brownout_ticks", "ticks spent degraded "
+                 "(brown-out shedding active)",
+                 lambda: self.brownout_ticks),
+                ("cluster_queue_depth", "router queue backlog",
+                 lambda: len(self.queue))):
+            reg.gauge(name, help).labels().set_function(fn)
+        g_pl = reg.gauge("cluster_replica_placements",
+                         "requests placed on this replica", ("replica",))
+        g_st = reg.gauge("cluster_replica_steps",
+                         "engine ticks this replica stepped", ("replica",))
+        for rh in self.replicas:
+            g_pl.labels(replica=str(rh.rid)).set_function(
+                lambda h=rh: h.placements)
+            g_st.labels(replica=str(rh.rid)).set_function(
+                lambda h=rh: h.steps)
+        if self.tm.trace.enabled:
+            self.tm.trace.set_process_name(ROUTER_PID, "router")
 
     # ------------------------------------------------------------- submit
     def submit(self, req: Request) -> RouterHandle:
@@ -413,6 +459,16 @@ class ClusterRouter:
         rh.state = ReplicaState.LOST
         rh.fence()
         self.replicas_lost += 1
+        tr = self.tm.trace
+        # the fenced replica can never emit again: close every span it
+        # had open (in-flight requests mid-PREFILL/DECODE) so chaos
+        # leaves no orphans, then record the fence itself
+        tr.end_all(rh.rid, fenced=True)
+        n_failed = n_recovered = 0
+        if tr.enabled:
+            tr.instant(ROUTER_PID, "replica_lost", replica=rh.rid,
+                       tick=self.tick_count,
+                       in_flight=len(self.placed[rh.rid]))
         # recover every in-flight request: FRONT of the queue, newest
         # last, so recovered work resumes before fresh arrivals place
         victims = self.placed[rh.rid]
@@ -429,13 +485,30 @@ class ClusterRouter:
                 rr.req.finish_reason = "failed"
                 rr.req.t_finish = time.perf_counter()
                 self.failed += 1
+                n_failed += 1
                 self.finished.append(rr)
+                if tr.enabled:
+                    tr.instant(ROUTER_PID, "request_failed",
+                               tid=rr.req.req_id, retries=rr.retries)
                 continue
             reset_for_replay(rr.req)
             rr.not_before = (self.tick_count
                              + self.backoff_ticks * 2 ** (rr.retries - 1))
             self.queue.insert(0, rr)
             self.recoveries += 1
+            n_recovered += 1
+            if tr.enabled:
+                # the REPLAY span covers backoff-to-re-placement; it
+                # closes in _place when the request lands again
+                tr.begin(ROUTER_PID, rr.req.req_id, "REPLAY",
+                         lost_replica=rh.rid, retry=rr.retries,
+                         not_before=rr.not_before)
+        # every fence ships its own post-mortem (covers retry
+        # exhaustion too — failures happen only here)
+        self.tm.dump_flight(
+            f"fence-replica{rh.rid}",
+            extra={"tick": self.tick_count, "recovered": n_recovered,
+                   "failed": n_failed})
 
     def _heartbeats(self) -> None:
         for rh in self.replicas:
@@ -445,6 +518,10 @@ class ClusterRouter:
                 rh.misses = 0
             else:
                 rh.misses += 1
+                if self.tm.trace.enabled:
+                    self.tm.trace.instant(ROUTER_PID, "hb_miss",
+                                          replica=rh.rid,
+                                          misses=rh.misses)
                 if rh.misses >= self.miss_threshold:
                     self._mark_lost(rh)
 
@@ -514,6 +591,13 @@ class ClusterRouter:
             rr.history.append(rh.rid)
             self.queue.remove(rr)
             self.placed[rh.rid].append(rr)
+            tr = self.tm.trace
+            if tr.enabled:
+                # a re-placement after loss closes its REPLAY span here
+                tr.end_if_open(ROUTER_PID, rr.req.req_id,
+                               placed_on=rh.rid)
+                tr.instant(ROUTER_PID, "place", tid=rr.req.req_id,
+                           replica=rh.rid, retry=rr.retries)
 
     def _select_replica(self, req: Request,
                         pool: list) -> Optional[ReplicaHandle]:
@@ -546,8 +630,15 @@ class ClusterRouter:
         for rh in self.replicas:
             rh.release_pressure(self.tick_count)
         self._heartbeats()
-        if self.degraded():
+        degraded = self.degraded()
+        if degraded:
             self.brownout_ticks += 1
+        tr = self.tm.trace
+        if tr.enabled and degraded != self._brownout_prev:
+            tr.instant(ROUTER_PID,
+                       "brownout_enter" if degraded else "brownout_exit",
+                       tick=self.tick_count)
+        self._brownout_prev = degraded
         self._place()
         emitted = 0
         for rh in self.replicas:
@@ -566,6 +657,19 @@ class ClusterRouter:
                         rh.slow = False
                 else:
                     rh.slow = False
+        if tr.enabled:
+            for rh in self.replicas:
+                if rh.slow != getattr(rh, "_slow_seen", False):
+                    tr.instant(ROUTER_PID,
+                               "straggler_flagged" if rh.slow
+                               else "straggler_cleared", replica=rh.rid,
+                               tick=self.tick_count)
+                    rh._slow_seen = rh.slow
+            tr.counter(ROUTER_PID, "router",
+                       {"queued": len(self.queue),
+                        "recoveries": self.recoveries,
+                        "replicas_lost": self.replicas_lost,
+                        "failed": self.failed})
         self._harvest()
         return emitted
 
@@ -600,18 +704,25 @@ class ClusterRouter:
 
     # ---------------------------------------------------------- telemetry
     def stats(self) -> dict:
+        """Legacy router stats dict, read back through the metrics
+        registry (the ``cluster_*`` function-backed gauges) — key set is
+        schema-stable (tests/test_telemetry.py)."""
+        v = self.tm.registry.value
         return {
             "replicas": {
                 rh.rid: {"state": rh.state.value, "slow": rh.slow,
-                         "placements": rh.placements, "steps": rh.steps,
+                         "placements": int(v("cluster_replica_placements",
+                                             replica=str(rh.rid))),
+                         "steps": int(v("cluster_replica_steps",
+                                        replica=str(rh.rid))),
                          "flags": len(rh.watchdog.flagged)}
                 for rh in self.replicas},
-            "ticks": self.tick_count,
-            "recoveries": self.recoveries,
-            "replicas_lost": self.replicas_lost,
-            "failed": self.failed,
-            "brownout_ticks": self.brownout_ticks,
-            "queued": len(self.queue),
+            "ticks": int(v("cluster_ticks")),
+            "recoveries": int(v("cluster_recoveries")),
+            "replicas_lost": int(v("cluster_replicas_lost")),
+            "failed": int(v("cluster_failed")),
+            "brownout_ticks": int(v("cluster_brownout_ticks")),
+            "queued": int(v("cluster_queue_depth")),
         }
 
     def request_metrics(self) -> list[dict]:

@@ -331,6 +331,37 @@ class KVCacheManager:
         self.prefix = PrefixCache(self.pool) if prefix_cache else None
         self.page_table = np.zeros((slots, self.max_pages), np.int32)
         self._held: list[list[int]] = [[] for _ in range(slots)]
+        # metrics: a private registry by default; the owning engine
+        # rebinds onto the shared one (ServeEngine.bind_telemetry)
+        self.bind_metrics(None, 0)
+
+    def bind_metrics(self, registry, replica: int) -> None:
+        """Register the pool's series on ``registry`` (private
+        ``MetricsRegistry`` when None) as function-backed gauges — the
+        allocator keeps its own bookkeeping hot; the registry reads it
+        live at export time, and ``stats()`` reads back through the
+        registry so the legacy dict stays a view, not a second ledger."""
+        from repro.runtime.telemetry import MetricsRegistry
+        if registry is None:
+            registry = MetricsRegistry()
+        self._registry = registry
+        self._replica = int(replica)
+        lbl = {"replica": str(replica)}
+        for name, help, fn in (
+                ("kv_page_size", "tokens per KV page",
+                 lambda: self.page_size),
+                ("kv_pages_capacity", "allocatable pages in the pool",
+                 lambda: self.pool.capacity),
+                ("kv_pages_in_use", "pages currently referenced",
+                 lambda: self.pool.in_use),
+                ("kv_prefix_entries", "prefix-cache chains resident",
+                 lambda: 0 if self.prefix is None else len(self.prefix)),
+                ("kv_prefix_hits", "prefix-cache probe hits",
+                 lambda: 0 if self.prefix is None else self.prefix.hits),
+                ("kv_prefix_misses", "prefix-cache probe misses",
+                 lambda: 0 if self.prefix is None else self.prefix.misses)):
+            registry.gauge(name, help, ("replica",)).labels(
+                **lbl).set_function(fn)
 
     # ------------------------------------------------------------- sizing
     def blocks_needed(self, prompt_len: int, max_new: int) -> int:
@@ -476,12 +507,17 @@ class KVCacheManager:
 
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:
+        """Legacy stats dict, read back through the metrics registry
+        (the ``kv_*`` function-backed gauges registered in
+        ``bind_metrics``) — key set is schema-stable
+        (tests/test_telemetry.py)."""
+        v = self._registry.value
+        lbl = {"replica": str(self._replica)}
         return {
-            "page_size": self.page_size,
-            "capacity_pages": self.pool.capacity,
-            "in_use_pages": self.pool.in_use,
-            "prefix_entries": 0 if self.prefix is None else len(self.prefix),
-            "prefix_hits": 0 if self.prefix is None else self.prefix.hits,
-            "prefix_misses": (0 if self.prefix is None
-                              else self.prefix.misses),
+            "page_size": int(v("kv_page_size", **lbl)),
+            "capacity_pages": int(v("kv_pages_capacity", **lbl)),
+            "in_use_pages": int(v("kv_pages_in_use", **lbl)),
+            "prefix_entries": int(v("kv_prefix_entries", **lbl)),
+            "prefix_hits": int(v("kv_prefix_hits", **lbl)),
+            "prefix_misses": int(v("kv_prefix_misses", **lbl)),
         }

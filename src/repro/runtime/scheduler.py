@@ -313,6 +313,31 @@ class Scheduler:
         self.allocator = DRFAllocator(total, zero=ServeResource(),
                                       weights=weights)
         self.policy.bind(total, self.allocator)
+        # metrics: a private registry by default; the owning engine
+        # rebinds onto the shared one (ServeEngine.bind_telemetry)
+        self.bind_metrics(None, 0)
+
+    def bind_metrics(self, registry, replica: int) -> None:
+        """Register this scheduler's series on ``registry`` (a private
+        ``MetricsRegistry`` when None).  ``preempted_total`` stays the
+        plain attribute — it is gauge-shaped (``_unpreempt_slot``
+        decrements it on a rolled-back swap) — exposed function-backed;
+        admissions/backpressure are prebound counter children."""
+        from repro.runtime.telemetry import MetricsRegistry
+        if registry is None:
+            registry = MetricsRegistry()
+        lbl = {"replica": str(replica)}
+        self._m_admissions = registry.counter(
+            "serve_admissions_total", "requests admitted into a slot",
+            ("replica",)).labels(**lbl)
+        self._m_backpressure = registry.counter(
+            "serve_backpressure_total",
+            "admissions deferred on page-pool exhaustion",
+            ("replica",)).labels(**lbl)
+        registry.gauge(
+            "serve_preempted", "preemptions decided minus rollbacks",
+            ("replica",)).labels(**lbl).set_function(
+            lambda: self.preempted_total)
 
     def submit(self, req) -> None:
         self.queue.append(req)
@@ -387,6 +412,7 @@ class Scheduler:
             else:
                 res = self.kv.admit(s, req.prompt, req.max_new_tokens)
                 if res is None:
+                    self._m_backpressure.inc()
                     return False
         del self.queue[i]
         demand = self.demand(req)
@@ -397,6 +423,7 @@ class Scheduler:
         self._admit_seq += 1
         self.policy.on_admit(req, demand)
         view[s] = req
+        self._m_admissions.inc()
         plan.admissions.append(Admission(slot=s, req=req, kv=res,
                                          resume=resume))
         return True

@@ -120,7 +120,8 @@ from repro.runtime.sampling import (SamplingParams, matches_stop,
                                     sample_tokens, speculative_accept)
 from repro.runtime.scheduler import Scheduler
 from repro.runtime.steps import (compiled_fn, compiled_step,
-                                 pick_decode_splits)
+                                 pick_decode_splits, step_cache_stats)
+from repro.runtime.telemetry import Telemetry
 
 __all__ = ["Checkpoint", "Request", "RequestHandle", "RequestState",
            "SamplingParams", "ServeConfig", "ServeEngine", "ServeStalled",
@@ -310,7 +311,8 @@ _CONFIG_FIELDS = {f.name for f in dataclasses.fields(ServeConfig)}
 
 class ServeEngine:
     def __init__(self, model, params, config: Optional[ServeConfig] = None,
-                 *, mesh=None, cache_shardings=None, **legacy):
+                 *, mesh=None, cache_shardings=None, telemetry=None,
+                 replica: int = 0, **legacy):
         if legacy:
             if config is not None:
                 raise TypeError(
@@ -474,6 +476,84 @@ class ServeEngine:
         self._needs_reset = model.cfg.family in ("ssm", "hybrid")
         if self._needs_reset:
             self._reset = self._make_slot_reset(model, max_len)
+        # telemetry: every engine binds a Telemetry sink (a private one by
+        # default — metrics always on, tracing off unless the caller
+        # passes Telemetry(trace=True)); a ClusterRouter rebinds its
+        # replicas onto one shared sink with per-replica labels
+        self.bind_telemetry(telemetry, replica=replica)
+
+    def bind_telemetry(self, telemetry: Optional[Telemetry] = None, *,
+                       replica: int = 0) -> None:
+        """Bind (or rebind — replica rejoin reuses this) the engine and
+        its scheduler/KV manager to a ``Telemetry`` sink.  Registry
+        series carry a ``replica`` label; trace events use the replica id
+        as their ``pid`` track.  Hot-path counter children are prebound
+        here so a tick increments a float, never does a dict lookup."""
+        self.tm = telemetry if telemetry is not None else Telemetry()
+        self.replica = int(replica)
+        reg = self.tm.registry
+        lbl = {"replica": str(self.replica)}
+        self._m_ticks = reg.counter(
+            "engine_ticks_total", "engine ticks stepped",
+            ("replica",)).labels(**lbl)
+        self._m_tokens = reg.counter(
+            "engine_tokens_total", "output tokens emitted",
+            ("replica",)).labels(**lbl)
+        self._m_submitted = reg.counter(
+            "engine_requests_submitted_total", "requests submitted",
+            ("replica",)).labels(**lbl)
+        self._m_finished = reg.counter(
+            "engine_requests_finished_total",
+            "requests finished, by finish reason", ("replica", "reason"))
+        reg.gauge("engine_live_slots", "slots holding an active request",
+                  ("replica",)).labels(**lbl).set_function(
+            lambda: sum(r is not None for r in self.active))
+        reg.gauge("engine_queue_depth", "requests awaiting admission",
+                  ("replica",)).labels(**lbl).set_function(
+            lambda: len(self.scheduler.queue))
+        if self.draft_k:
+            # function-backed: the spec tick's tight loop keeps bumping
+            # plain attributes; the registry reads them at export time
+            for name, attr in (("engine_spec_proposed", "spec_proposed"),
+                               ("engine_spec_accepted", "spec_accepted"),
+                               ("engine_spec_emitted", "spec_emitted"),
+                               ("engine_spec_ticks", "spec_ticks")):
+                reg.gauge(name, f"speculative decode: {attr}",
+                          ("replica",)).labels(**lbl).set_function(
+                    lambda a=attr: getattr(self, a))
+        self.scheduler.bind_metrics(reg, self.replica)
+        if self.kv is not None:
+            self.kv.bind_metrics(reg, self.replica)
+        if self.tm.trace.enabled:
+            self.tm.trace.set_process_name(self.replica,
+                                           f"replica {self.replica}")
+
+    def _set_state(self, req: Request, state: RequestState, **args) -> None:
+        """One request-lifecycle edge: flip ``req.state`` and roll the
+        request's trace span over to the new state (no-op sink when
+        tracing is off)."""
+        req.state = state
+        self.tm.req_transition(self.replica, req.req_id, state.name, **args)
+
+    def _tick_telemetry(self, emitted: int) -> None:
+        """Per-tick accounting: counters always (two float adds), plus a
+        Chrome counter-track sample of the engine's vitals when tracing
+        is live."""
+        self._m_ticks.inc()
+        if emitted:
+            self._m_tokens.inc(emitted)
+        tr = self.tm.trace
+        if not tr.enabled:
+            return
+        vals = {"live_slots": sum(r is not None for r in self.active),
+                "queue_depth": len(self.scheduler.queue)}
+        if self.kv is not None:
+            vals["free_pages"] = self.kv.pool.available
+        if self.draft_k:
+            vals["spec_proposed"] = self.spec_proposed
+            vals["spec_accepted"] = self.spec_accepted
+        vals["step_cache_hits"] = step_cache_stats()["hits"]
+        tr.counter(self.replica, "engine", vals)
 
     @property
     def queue(self) -> deque:
@@ -509,8 +589,9 @@ class ServeEngine:
                 f"(prompt {len(req.prompt)} + max_new {req.max_new_tokens} "
                 f"vs {self.kv.pool.capacity} pages of "
                 f"{self.kv.page_size})")
-        req.state = RequestState.QUEUED
+        self._set_state(req, RequestState.QUEUED, tenant=req.tenant)
         req.t_submit = time.perf_counter()
+        self._m_submitted.inc()
         self.scheduler.submit(req)
         return RequestHandle(req, self)
 
@@ -537,6 +618,12 @@ class ServeEngine:
         req.state = RequestState.FINISHED
         req.finish_reason = reason
         req.t_finish = time.perf_counter()
+        # close the request's span stream (FINISHED is terminal — an end,
+        # not a new span) and count the finish by reason
+        self.tm.req_end(self.replica, req.req_id, reason=reason,
+                        tokens=len(req.output))
+        self._m_finished.labels(replica=str(self.replica),
+                                reason=reason).inc()
         self._clear_slot(s)
         if self.kv is not None:
             self.kv.free_slot(s)  # pages return to the pool immediately
@@ -569,7 +656,8 @@ class ServeEngine:
                                last_token=int(self.tokens[s, 0]),
                                pages=getattr(req, "_ckpt_pages", None),
                                kv=kv_snap)
-        req.state = RequestState.PREEMPTED
+        self._set_state(req, RequestState.PREEMPTED, pos=req._ckpt.pos,
+                        count=req.preempt_count + 1)
         req.preempt_count += 1
         self._clear_slot(s)
 
@@ -592,7 +680,8 @@ class ServeEngine:
         req._ckpt = None
         req._ckpt_pages = None
         req._preempted = False
-        req.state = RequestState.DECODE
+        self._set_state(req, RequestState.DECODE, resume=True,
+                        pos=int(self.pos[s]))
 
     def _execute_admission(self, adm):
         """Executor half of admission: apply one scheduler decision —
@@ -608,7 +697,7 @@ class ServeEngine:
         if adm.resume:
             self._execute_resume(s, req)
             return
-        req.state = RequestState.PREFILL
+        self._set_state(req, RequestState.PREFILL, slot=s)
         if self.kv is not None:
             # CoW pages (adm.kv.cow) need no device copy here: they span
             # [start, matched), so the first re-run prefill chunk rewrites
@@ -619,14 +708,14 @@ class ServeEngine:
             # complete before a single decode tick runs, in which case
             # the freed slot admits again immediately
             if not self._maybe_stop(s):
-                req.state = RequestState.DECODE
+                self._set_state(req, RequestState.DECODE)
             return
         if self._needs_reset:
             self.caches = self._reset(self.caches, jnp.int32(s))
         if self.chunked:
             self._prefill_slot(s, req)
             if not self._maybe_stop(s):
-                req.state = RequestState.DECODE
+                self._set_state(req, RequestState.DECODE)
         else:
             req._feed = deque(req.prompt.tolist())  # type: ignore
             self.tokens[s, 0] = req._feed.popleft()
@@ -726,7 +815,7 @@ class ServeEngine:
             self.samp_topk[s] = sp.top_k
             self.samp_topp[s] = sp.top_p
             self.samp_keys[s] = sp.key_data(req.req_id)
-            req.state = RequestState.PREFILL
+            self._set_state(req, RequestState.PREFILL, slot=s)
             req._feed = deque(req.prompt.tolist())  # type: ignore
             self.tokens[s, 0] = req._feed.popleft()
 
@@ -734,8 +823,11 @@ class ServeEngine:
     def step(self) -> int:
         """One engine tick = one decode step for every live slot."""
         if self.mode == "wave":
-            return self._step_wave()
-        return self._step_continuous()
+            emitted = self._step_wave()
+        else:
+            emitted = self._step_continuous()
+        self._tick_telemetry(emitted)
+        return emitted
 
     def _step_for_splits(self, splits: int, sampled: bool):
         """Dense decode step with a given split-K fan-out (fan-outs from
@@ -795,7 +887,7 @@ class ServeEngine:
                 self.tokens[s, 0] = feed.popleft()
                 continue
             if req.state is RequestState.PREFILL:  # token-feed path done
-                req.state = RequestState.DECODE
+                self._set_state(req, RequestState.DECODE)
             tok = int(nxt[s, 0])
             self._emit(req, tok)
             emitted += 1
@@ -893,7 +985,7 @@ class ServeEngine:
                 self.tokens[s, 0] = fq.popleft()
                 continue
             if req.state is RequestState.PREFILL:  # token-feed path done
-                req.state = RequestState.DECODE
+                self._set_state(req, RequestState.DECODE)
             k_s = int(draft_len[s])
             m = (speculative_accept(feed[s, 1:1 + k_s], target[s, :k_s])
                  if k_s else 0)
@@ -912,18 +1004,26 @@ class ServeEngine:
 
     def spec_stats(self) -> dict:
         """Speculative-decode telemetry: draft acceptance rate and the
-        average tokens emitted per verify tick (1.0 = plain decode)."""
+        average tokens emitted per verify tick (1.0 = plain decode).
+        Values are read back through the metrics registry (the
+        function-backed ``engine_spec_*`` gauges), keeping this legacy
+        dict a view over the one telemetry source of truth."""
         if not self.draft_k:
             return {"draft_k": 0}
+        v = self.tm.registry.value
+        lbl = {"replica": str(self.replica)}
+        proposed = int(v("engine_spec_proposed", **lbl))
+        accepted = int(v("engine_spec_accepted", **lbl))
+        emitted = int(v("engine_spec_emitted", **lbl))
+        ticks = int(v("engine_spec_ticks", **lbl))
         return {
             "draft_k": self.draft_k,
             "drafter": self.config.drafter,
-            "proposed": self.spec_proposed,
-            "accepted": self.spec_accepted,
-            "acceptance_rate": (self.spec_accepted
-                                / max(self.spec_proposed, 1)),
-            "spec_ticks": self.spec_ticks,
-            "tokens_per_tick": self.spec_emitted / max(self.spec_ticks, 1),
+            "proposed": proposed,
+            "accepted": accepted,
+            "acceptance_rate": accepted / max(proposed, 1),
+            "spec_ticks": ticks,
+            "tokens_per_tick": emitted / max(ticks, 1),
         }
 
     def _step_wave(self) -> int:
@@ -959,7 +1059,7 @@ class ServeEngine:
                 self.tokens[s, 0] = feed.popleft()
                 continue
             if req.state is RequestState.PREFILL:
-                req.state = RequestState.DECODE
+                self._set_state(req, RequestState.DECODE)
             tok = int(nxt[s])
             self._emit(req, tok)
             emitted += 1

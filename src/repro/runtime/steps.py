@@ -4,6 +4,7 @@ step, one serve (decode) step — these are the "MPI tasks" of DESIGN.md §2.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from typing import Callable
 
@@ -279,11 +280,12 @@ _STEP_CACHE: OrderedDict = OrderedDict()
 _STEP_CACHE_MAX = 64
 _step_cache_hits = 0
 _step_cache_misses = 0
+_step_build_s = 0.0  # wall seconds spent building/jit-wrapping on misses
 
 
 def step_cache_stats() -> dict:
     return {"hits": _step_cache_hits, "misses": _step_cache_misses,
-            "size": len(_STEP_CACHE)}
+            "size": len(_STEP_CACHE), "build_s": _step_build_s}
 
 
 def compiled_fn(key, build: Callable, donate=()) -> Callable:
@@ -293,7 +295,7 @@ def compiled_fn(key, build: Callable, donate=()) -> Callable:
     The serving engine routes every compiled callable — decode/prefill
     steps and the checkpoint copy_out/copy_in pair — through here, so
     there is exactly one cache to size and instrument."""
-    global _step_cache_hits, _step_cache_misses
+    global _step_cache_hits, _step_cache_misses, _step_build_s
     try:
         fn = _STEP_CACHE.get(key)
     except TypeError:
@@ -304,7 +306,9 @@ def compiled_fn(key, build: Callable, donate=()) -> Callable:
         _STEP_CACHE.move_to_end(key)
         return fn
     _step_cache_misses += 1
+    t0 = time.perf_counter()
     fn = jax.jit(build(), donate_argnums=donate)
+    _step_build_s += time.perf_counter() - t0
     if key is not None:
         _STEP_CACHE[key] = fn
         while len(_STEP_CACHE) > _STEP_CACHE_MAX:
