@@ -1,0 +1,316 @@
+"""Disaggregated serving: prefill/decode split vs unified, chaos
+mid-handoff, and elastic-autoscaler churn.
+
+Part 1 (split) drives a **prefill-heavy** trace (long prompts, short
+continuations — the regime disaggregation targets) through a unified
+2-replica pool and through a 1 prefill + 1 decode ``DisaggRouter`` with
+the same total slots, and reports tokens/s + TTFT percentiles for each.
+The outputs must be bitwise-identical across the split: sampling folds
+(request key, absolute position), never slot or replica.
+
+Part 2 (chaos) kills a prefill replica at the instant handoffs from it
+sit in transit (paged chains still in the dying pool).  The run is
+fully traced with the flight recorder armed; the gate asserts zero lost
+requests, >= 1 replay recovery, outputs bitwise-identical to the
+fault-free disagg twin, surviving pools drained, HANDOFF spans in the
+Chrome trace, and the fence's flight dump carrying the in-transit
+handoff snapshot.
+
+Part 3 (churn) runs the same stack under an elastic ``Autoscaler``
+(cold DOWN spares rejoin under backlog) and, at thousands-of-requests
+scale, the ``core.simulator.ServeChurnSim`` driving the *same*
+autoscaler against a fake cluster: zero lost requests, min/max bounds
+respected, both scale directions exercised, scale events visible as
+SCALE_* telemetry spans.
+
+    PYTHONPATH=src python benchmarks/disagg_serve.py [--dry]
+
+Emits BENCH_disagg_serve[_dry].json via ``common.emit_json``;
+``scripts/check_bench.py`` gates the dry numbers against
+``benchmarks/baselines/``.
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # python -m benchmarks.disagg_serve
+    from .common import emit_json
+except ImportError:  # python benchmarks/disagg_serve.py
+    sys.path.insert(0, os.path.dirname(__file__))
+    from common import emit_json
+from repro.configs import get_config
+from repro.core.simulator import ServeChurnSim
+from repro.models import LM, RuntimeKnobs
+from repro.runtime.autoscale import Autoscaler
+from repro.runtime.cluster import ClusterRouter
+from repro.runtime.disagg import DisaggRouter
+from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
+                                 ServeEngine)
+from repro.runtime.telemetry import Telemetry, validate_chrome_trace
+
+_PAGED = dict(cache="paged", page_size=8, prefix_cache=False)
+
+
+def trace(*, n, max_new, vocab, seed=0):
+    """Prefill-heavy: prompts 16-32 tokens, short continuations, mixed
+    greedy + seeded-sampled."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(16, 33))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        sp = SamplingParams(temperature=0.8 if i % 2 else 0.0, seed=11)
+        reqs.append(Request(i, prompt, max_new_tokens=max_new,
+                            sampling=sp,
+                            tenant="gold" if i % 3 == 0 else "free"))
+    return reqs
+
+
+def fresh(reqs):
+    return [dataclasses.replace(r, prompt=np.asarray(r.prompt), output=[])
+            for r in reqs]
+
+
+def run_router(router, reqs):
+    handles = [router.submit(r) for r in reqs]
+    t0 = time.perf_counter()
+    done = router.run(max_ticks=20_000)
+    wall = time.perf_counter() - t0
+    return summarize(router, handles, done, len(reqs), wall)
+
+
+def summarize(router, handles, done, n_submitted, wall):
+    toks = sum(len(r.output) for r in done)
+    ttft = [h.metrics().get("ttft_s") for h in handles]
+    ttft = [t for t in ttft if t is not None]
+    out = {
+        "requests": len(done), "tokens": int(toks), "wall_s": wall,
+        "tok_per_s": toks / max(wall, 1e-9),
+        "all_completed": bool(
+            len(done) == n_submitted
+            and all(r.finish_reason != "failed" for r in done)),
+        "outputs": {r.req_id: list(r.output) for r in done},
+        "pool_drained": all(
+            rh.engine.kv.pool.in_use == 0
+            for rh in router.replicas
+            if rh.engine is not None and rh.engine.kv is not None),
+    }
+    if ttft:
+        out["p50_ttft_s"] = float(np.percentile(ttft, 50))
+        out["p99_ttft_s"] = float(np.percentile(ttft, 99))
+    return out
+
+
+def make_disagg(model, params, roles, *, slots, max_len, start_down=(),
+                telemetry=None, num_pages=None, **router_kw):
+    base = ServeConfig(batch_slots=slots, max_len=max_len,
+                       num_pages=num_pages, **_PAGED)
+
+    def make_engine(rid):
+        return ServeEngine(model, params,
+                           dataclasses.replace(base, role=roles[rid]))
+
+    return DisaggRouter(make_engine, len(roles), roles=list(roles),
+                        start_down=start_down, telemetry=telemetry,
+                        **router_kw)
+
+
+def run(dry: bool = True, slots: int = 2, max_len: int = 64):
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              num_layers=2, vocab_size=64)
+    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+    params = model.init(jax.random.PRNGKey(0))
+
+    trace_kw = (dict(n=10, max_new=6) if dry
+                else dict(n=32, max_new=24))
+    reqs = trace(vocab=cfg.vocab_size, **trace_kw)
+    results = {"trace": trace_kw, "slots": slots, "max_len": max_len}
+
+    # warm the compiled steps (incl. the cross-pool page transfer) so
+    # Part 1 times serving, not jit
+    warm = make_disagg(model, params, ["prefill", "decode"],
+                       slots=slots, max_len=max_len)
+    run_router(warm, fresh(reqs[:2]))
+
+    # ---- Part 1: disagg vs unified on a prefill-heavy trace ---------
+    def make_unified(rid):
+        return ServeEngine(model, params, ServeConfig(
+            batch_slots=slots, max_len=max_len, **_PAGED))
+
+    unified = run_router(
+        ClusterRouter(make_unified, 2, policy="spread"), fresh(reqs))
+    disagg = run_router(
+        make_disagg(model, params, ["prefill", "decode"],
+                    slots=slots, max_len=max_len), fresh(reqs))
+    results["disagg_bitwise_identical"] = bool(
+        unified["outputs"] == disagg["outputs"])
+    for name, r in (("unified", unified), ("disagg", disagg)):
+        results[name] = {k: r[k] for k in
+                         ("requests", "tokens", "wall_s", "tok_per_s",
+                          "all_completed", "pool_drained", "p50_ttft_s",
+                          "p99_ttft_s") if k in r}
+        print(f"{name}: {r['tokens']} tok in {r['wall_s']:.2f}s -> "
+              f"{r['tok_per_s']:.1f} tok/s, ttft p50 "
+              f"{r.get('p50_ttft_s', 0) * 1e3:.0f}ms / p99 "
+              f"{r.get('p99_ttft_s', 0) * 1e3:.0f}ms")
+
+    # ---- Part 2: chaos — kill a prefill replica mid-handoff ---------
+    # single-slot decode replica keeps the handoff queue non-empty, so
+    # the kill provably lands with chains in transit from the victim
+    # slots=1 shrinks the default pool below chain + chunk headroom —
+    # give the single-slot engines a 16-page pool so admission fits
+    clean = run_router(
+        make_disagg(model, params, ["prefill", "prefill", "decode"],
+                    slots=1, max_len=max_len, num_pages=16), fresh(reqs))
+    tm = Telemetry(trace=True, flight=512, flight_dir="artifacts")
+    router = make_disagg(model, params, ["prefill", "prefill", "decode"],
+                         slots=1, max_len=max_len, num_pages=16,
+                         miss_threshold=1, telemetry=tm)
+    handles = [router.submit(r) for r in fresh(reqs)]
+    t0 = time.perf_counter()
+    for _ in range(200):
+        router.step()
+        if any(h.src == 1 for h in router.handoffs):
+            break
+    in_flight = sum(1 for h in router.handoffs if h.src == 1)
+    router.replicas[1].killed = True  # dies with handoffs in transit
+    done = router.run(max_ticks=20_000)
+    chaos = summarize(router, handles, done, len(reqs),
+                      time.perf_counter() - t0)
+    st = router.stats()
+    trace_path = tm.write_trace(os.path.join("artifacts",
+                                             "disagg_chaos_trace.json"))
+    v = validate_chrome_trace(trace_path)
+    flight_snapshot = False
+    for dump in tm.flight_dumps:
+        with open(dump) as f:
+            payload = json.load(f)
+        if payload.get("handoffs_in_transit"):
+            flight_snapshot = True
+    results["chaos"] = {
+        k: chaos[k] for k in ("requests", "tokens", "wall_s", "tok_per_s",
+                              "all_completed", "pool_drained")}
+    results["chaos"].update(
+        handoffs_in_transit_at_kill=in_flight,
+        recoveries=st["recoveries"], failed=st["failed"],
+        handoffs_done=st["handoffs_done"],
+        handoff_spans=sum(1 for e in tm.trace.events
+                          if e.get("ph") == "B"
+                          and e.get("name") == "HANDOFF"),
+        replay_spans=sum(1 for e in tm.trace.events
+                         if e.get("ph") == "B"
+                         and e.get("name") == "REPLAY"),
+        spans_balanced=not tm.trace.open_spans(),
+        trace_valid=bool(v["balanced"]),
+        flight_has_handoff_snapshot=flight_snapshot,
+        flight_dumps=list(tm.flight_dumps))
+    results["chaos_bitwise_identical"] = bool(
+        chaos["outputs"] == clean["outputs"])
+    print(f"chaos: killed prefill-1 with {in_flight} handoffs in "
+          f"transit; {st['recoveries']} recoveries, bitwise identical "
+          f"{results['chaos_bitwise_identical']}, trace -> {trace_path}")
+
+    # ---- Part 3a: autoscaled churn on the real stack ----------------
+    tm2 = Telemetry(trace=True)
+    roles = ["prefill", "prefill", "decode", "decode"]
+    churn_router = make_disagg(model, params, roles, slots=slots,
+                               max_len=max_len, start_down=(1, 3),
+                               telemetry=tm2)
+    churn_router.autoscaler = Autoscaler(
+        churn_router, "queue-depth", cooldown=2, sustain=2,
+        max_replicas=2, telemetry=tm2)
+    churn = run_router(churn_router, fresh(reqs))
+    asc = churn_router.autoscaler
+    scale_spans = sum(1 for e in tm2.trace.events
+                      if e.get("ph") == "B"
+                      and e.get("name", "").startswith("SCALE_"))
+    results["churn"] = {
+        "requests": churn["requests"], "tokens": churn["tokens"],
+        "all_completed": churn["all_completed"],
+        "lost": int(churn_router.stats()["failed"]),
+        "pool_drained": churn["pool_drained"],
+        "scale_ups": asc.scale_ups, "scale_downs": asc.scale_downs,
+        "scale_spans": scale_spans,
+        "spans_balanced": not tm2.trace.open_spans(),
+    }
+    print(f"churn: {churn['requests']} served, lost "
+          f"{results['churn']['lost']}, {asc.scale_ups} scale-ups / "
+          f"{asc.scale_downs} scale-downs, {scale_spans} SCALE_* spans")
+
+    # ---- Part 3b: thousands-of-requests churn via the simulator -----
+    sim_trace = ([3] * 60 + [0] * 80 + [2] * 60 if dry
+                 else [5] * 300 + [0] * 100 + [4] * 200)
+    sim = ServeChurnSim(seed=1, trace=sim_trace, max_replicas=4,
+                        cooldown=8, sustain=2)
+    res = sim.run(max_ticks=50_000)
+    results["sim"] = {
+        "arrived": res["arrived"], "completed": res["completed"],
+        "lost": res["lost"], "pending": res["pending"],
+        "completed_all": bool(res["completed"] == res["arrived"]
+                              and res["lost"] == 0
+                              and res["pending"] == 0),
+        "bounds_respected": res["bounds_respected"],
+        "scale_ups": res["scale_ups"],
+        "scale_downs": res["scale_downs"],
+        "peak_replicas": res["peak_replicas"],
+    }
+    print(f"sim churn: {res['arrived']} arrived, {res['completed']} "
+          f"completed, {res['scale_ups']} ups / {res['scale_downs']} "
+          f"downs, peak {res['peak_replicas']}")
+
+    emit_json("disagg_serve_dry" if dry else "disagg_serve", results)
+    # headline claims, asserted in-process (machine-independent):
+    assert results["disagg_bitwise_identical"], \
+        "disagg outputs diverged from the unified pool"
+    assert unified["all_completed"] and disagg["all_completed"]
+    assert disagg["pool_drained"], "disagg run leaked KV pages"
+    assert chaos["all_completed"], \
+        "requests were lost to the mid-handoff kill"
+    assert results["chaos_bitwise_identical"], \
+        "post-kill continuations diverged from the fault-free twin"
+    assert results["chaos"]["recoveries"] >= 1, \
+        "the chaos kill recovered nothing — the gate tested nothing"
+    assert chaos["pool_drained"], \
+        "surviving replicas leaked KV pages after the mid-handoff kill"
+    assert results["chaos"]["handoff_spans"] >= 1
+    assert results["chaos"]["spans_balanced"], \
+        "chaos run left trace spans open"
+    assert results["chaos"]["trace_valid"]
+    assert results["churn"]["lost"] == 0, "autoscaled churn lost requests"
+    assert results["churn"]["pool_drained"], \
+        "autoscaled churn left pages in a pool"
+    assert results["churn"]["scale_ups"] >= 1, \
+        "churn backlog never woke a cold spare"
+    assert results["churn"]["scale_spans"] >= 1, \
+        "scale events left no telemetry spans"
+    assert results["churn"]["spans_balanced"]
+    assert results["sim"]["completed_all"], "simulator churn lost requests"
+    assert results["sim"]["bounds_respected"], \
+        "simulator let a role leave its min/max bounds"
+    assert results["sim"]["scale_ups"] >= 1 \
+        and results["sim"]["scale_downs"] >= 1, \
+        "simulator churn failed to exercise both scale directions"
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="fast CI mode: tiny trace")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+    run(dry=args.dry, slots=args.slots, max_len=args.max_len)
+
+
+if __name__ == "__main__":
+    main()

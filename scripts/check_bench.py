@@ -42,7 +42,7 @@ import sys
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 DEFAULT_NAMES = ("serve_throughput", "paged_serve", "spec_decode",
-                 "cluster_serve", "kernel_roofline")
+                 "cluster_serve", "disagg_serve", "kernel_roofline")
 
 # (json path into the payload, kind): kind "rate" = higher is better,
 # "latency" = lower is better, gated by the respective tolerance
@@ -71,6 +71,12 @@ METRICS = {
         (("tok_per_s_2",), "rate"),
         (("tok_per_s_4",), "rate"),
         (("chaos", "tok_per_s"), "rate"),
+    ],
+    "disagg_serve": [
+        (("unified", "tok_per_s"), "rate"),
+        (("disagg", "tok_per_s"), "rate"),
+        (("chaos", "tok_per_s"), "rate"),
+        (("disagg", "p99_ttft_s"), "latency"),
     ],
     # achieved roofline fractions: numerator is a pure function of the
     # HLO, so the ratio regresses exactly when the kernel's real speed
@@ -139,6 +145,42 @@ BOUNDS = {
          "chaos trace left no orphan spans (kill/replay close cleanly)"),
         (("chaos", "trace_valid"), lambda v: bool(v),
          "chaos Chrome-trace export validates (Perfetto-loadable)"),
+    ],
+    "disagg_serve": [
+        (("disagg_bitwise_identical",), lambda v: bool(v),
+         "disagg outputs bitwise-identical to the unified pool"),
+        (("disagg", "pool_drained"), lambda v: bool(v),
+         "both halves of the split returned every KV page"),
+        (("chaos", "all_completed"), lambda v: bool(v),
+         "zero requests lost to the mid-handoff prefill kill"),
+        (("chaos", "recoveries"), lambda v: v >= 1,
+         "the mid-handoff kill actually exercised replay recovery"),
+        (("chaos_bitwise_identical",), lambda v: bool(v),
+         "post-kill continuations bitwise-identical to the clean twin"),
+        (("chaos", "pool_drained"), lambda v: bool(v),
+         "surviving pools drained after the mid-handoff kill"),
+        (("chaos", "handoff_spans"), lambda v: v >= 1,
+         "the chaos trace shows the handoff pipeline as HANDOFF spans"),
+        (("chaos", "spans_balanced"), lambda v: bool(v),
+         "chaos trace left no orphan spans"),
+        (("chaos", "trace_valid"), lambda v: bool(v),
+         "chaos Chrome-trace export validates (Perfetto-loadable)"),
+        (("chaos", "flight_has_handoff_snapshot"), lambda v: bool(v),
+         "the fence's flight dump carried the in-transit handoff queue"),
+        (("churn", "lost"), lambda v: v == 0,
+         "autoscaled churn lost zero requests"),
+        (("churn", "pool_drained"), lambda v: bool(v),
+         "autoscaled churn drained every pool"),
+        (("churn", "scale_ups"), lambda v: v >= 1,
+         "churn backlog woke at least one cold spare"),
+        (("churn", "scale_spans"), lambda v: v >= 1,
+         "scale events are visible as SCALE_* telemetry spans"),
+        (("sim", "completed_all"), lambda v: bool(v),
+         "simulator churn completed every arrival (zero lost/pending)"),
+        (("sim", "bounds_respected"), lambda v: bool(v),
+         "simulator kept every role inside its min/max bounds"),
+        (("sim", "scale_downs"), lambda v: v >= 1,
+         "simulator churn exercised scale-down (drain-before-retire)"),
     ],
     "kernel_roofline": [
         (("dense_decode", "flops"), lambda v: v > 0,

@@ -14,7 +14,9 @@
 #          speculative decode)
 #   chaos  cluster-serving chaos smoke: one of three replicas is killed
 #          mid-run via --fault-schedule and must rejoin; the launcher
-#          asserts zero lost requests (recovery by deterministic replay)
+#          asserts zero lost requests (recovery by deterministic replay);
+#          plus disagg (prefill/decode split) and autoscaled-disagg
+#          smokes through the same launcher flags
 #   bench  dry benchmarks + the regression gate (scripts/check_bench.py)
 #   all    full pytest (the pre-merge lane) + smoke + chaos + bench
 #          [default]
@@ -118,6 +120,25 @@ chaos() {
         --requests 9 --slots 2 --max-len 64 --max-new 8 \
         --replicas 3 --cache paged --page-size 8 --no-prefix-cache \
         --fault-schedule "seed=3:3:30"
+
+    echo "== disagg smoke (prefill/decode split, paged handoff) =="
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 8 --slots 2 --max-len 64 --max-new 8 \
+        --replicas 3 --roles "prefill=1,decode=2" \
+        --cache paged --page-size 8 --no-prefix-cache
+
+    echo "== disagg + autoscale smoke (cold spares, chaos kill) =="
+    # prefill replica 1 is killed mid-run and rejoins; the autoscaler
+    # wakes cold spares under the backlog — the launcher asserts zero
+    # lost requests in-process
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 12 --slots 2 --max-len 64 --max-new 8 \
+        --replicas 3 --roles "prefill=2,decode=1" \
+        --autoscale-policy queue-depth --max-replicas 3 \
+        --scale-cooldown 4 \
+        --fault-schedule "4:kill:1,24:rejoin:1" --miss-threshold 2 \
+        --trace-out artifacts/disagg_smoke_trace.json
+    python -m repro.runtime.telemetry artifacts/disagg_smoke_trace.json
 }
 
 bench() {

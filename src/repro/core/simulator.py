@@ -195,3 +195,218 @@ class Simulator:
             "pending": len(self.sched.pending),
             "running": len(self.sched.running),
         }
+
+
+# ===================================================================== churn
+# Serving-side churn simulation: drives the REAL runtime Autoscaler over a
+# fake disaggregated replica pool at thousands-of-requests scale.  No jax,
+# no engines — requests are (prefill_ticks, decode_ticks) work items — so
+# scaling scenarios the real cluster validates at small scale
+# (tests/test_disagg.py) can run 1000x larger here, deterministically.
+
+@dataclass
+class SimRequest:
+    """One synthetic request: remaining ticks of prefill/decode work."""
+
+    rid: int
+    prefill_left: int
+    decode_left: int
+    tenant: str = "free"
+
+
+@dataclass
+class SimReplica:
+    """One fake replica: role, slot capacity, lifecycle state, and the
+    requests currently occupying its slots."""
+
+    rid: int
+    role: str
+    slots: int
+    state: str = "up"  # up | draining | down
+    active: list = field(default_factory=list)
+
+    def free(self) -> int:
+        return self.slots - len(self.active)
+
+
+class ServeChurnSim:
+    """Churn harness implementing the ``Autoscaler`` adapter protocol.
+
+    The tick loop mirrors ``DisaggRouter.step``: arrivals queue for
+    prefill, finished prefills move to a handoff queue, decode replicas
+    adopt them, completions drain out.  The autoscaler under test is the
+    same object the real router runs; the sim only fakes the replicas.
+
+    ``trace`` is the per-tick arrival count (the default is a
+    burst / idle / burst shape that forces scale-ups AND scale-downs);
+    ``prefill_ticks`` / ``decode_ticks`` are (lo, hi) work ranges drawn
+    per request from the seeded rng.
+    """
+
+    ROLE_SPECS = ("prefill", "decode")
+
+    def __init__(self, *, slots: int = 4, init_replicas: int = 1,
+                 max_replicas: int = 4, min_replicas: int = 1,
+                 policy: str = "queue-depth", cooldown: int = 10,
+                 sustain: int = 3, trace=None, seed: int = 0,
+                 prefill_ticks=(1, 3), decode_ticks=(4, 12),
+                 tenant_weights=None):
+        import numpy as _np
+
+        from repro.runtime.autoscale import Autoscaler
+
+        self.rng = _np.random.default_rng(seed)
+        self.slots = slots
+        self.prefill_ticks = prefill_ticks
+        self.decode_ticks = decode_ticks
+        self.tenant_weights = dict(tenant_weights
+                                   or {"gold": 3.0, "free": 1.0})
+        if trace is None:
+            trace = [3] * 60 + [0] * 80 + [2] * 60
+        self.trace = list(trace)
+        self.replicas: list[SimReplica] = []
+        for role in self.ROLE_SPECS:
+            for i in range(max_replicas):
+                self.replicas.append(SimReplica(
+                    rid=len(self.replicas), role=role, slots=slots,
+                    state="up" if i < init_replicas else "down"))
+        self.prefill_queue: list[SimRequest] = []
+        self.handoff_queue: list[SimRequest] = []
+        self.completed = 0
+        self.arrived = 0
+        self.tick_now = 0
+        self.bounds_ok = True
+        self.replica_trace: list[dict] = []
+        self.autoscaler = Autoscaler(
+            self, policy, min_replicas=min_replicas,
+            max_replicas=max_replicas, cooldown=cooldown, sustain=sustain)
+
+    # ----------------------------------------------- autoscaler adapter
+    def scale_roles(self):
+        return list(self.ROLE_SPECS)
+
+    def _of_role(self, role, *states):
+        return [r for r in self.replicas
+                if r.role == role and r.state in states]
+
+    def replica_state(self, rid: int) -> str:
+        return self.replicas[rid].state
+
+    def observe(self, role: str):
+        from repro.runtime.autoscale import RoleObservation
+        live = self._of_role(role, "up")
+        backlog = (self.prefill_queue if role == "prefill"
+                   else self.handoff_queue)
+        return RoleObservation(
+            role=role, live=len(live), backlog=len(backlog),
+            weighted_backlog=sum(
+                self.tenant_weights.get(r.tenant, 1.0) for r in backlog),
+            free_slots=sum(r.free() for r in live),
+            slots_per_replica=self.slots)
+
+    def scale_up(self, role: str):
+        down = self._of_role(role, "down")
+        if not down:
+            return None
+        down[0].state = "up"
+        return down[0].rid
+
+    def begin_scale_down(self, role: str):
+        up = self._of_role(role, "up")
+        if not up:
+            return None
+        victim = min(up, key=lambda r: (len(r.active), -r.rid))
+        victim.state = "draining"
+        # drain-migrate, as the real router does through release():
+        # prefill work requeues (its progress is a few ticks), decode
+        # work re-enters the handoff queue checkpoint-style
+        if victim.role == "prefill":
+            self.prefill_queue = victim.active + self.prefill_queue
+        else:
+            self.handoff_queue = victim.active + self.handoff_queue
+        victim.active = []
+        return victim.rid
+
+    # ------------------------------------------------------------ ticking
+    def _arrive(self, n: int) -> None:
+        for _ in range(n):
+            self.arrived += 1
+            self.prefill_queue.append(SimRequest(
+                rid=self.arrived,
+                prefill_left=int(self.rng.integers(*self.prefill_ticks,
+                                                   endpoint=True)),
+                decode_left=int(self.rng.integers(*self.decode_ticks,
+                                                  endpoint=True)),
+                tenant=("gold" if self.rng.random() < 0.3 else "free")))
+
+    def _place(self, queue: list, role: str) -> None:
+        for rep in self._of_role(role, "up"):
+            while queue and rep.free() > 0:
+                rep.active.append(queue.pop(0))
+
+    def step(self) -> None:
+        t = self.tick_now
+        self._arrive(self.trace[t] if t < len(self.trace) else 0)
+        self.autoscaler.tick(t)
+        # advance + harvest both stages (draining replicas keep working)
+        for rep in self._of_role("prefill", "up", "draining"):
+            done = []
+            for req in rep.active:
+                req.prefill_left -= 1
+                if req.prefill_left <= 0:
+                    done.append(req)
+            for req in done:
+                rep.active.remove(req)
+                self.handoff_queue.append(req)
+        for rep in self._of_role("decode", "up", "draining"):
+            done = []
+            for req in rep.active:
+                req.decode_left -= 1
+                if req.decode_left <= 0:
+                    done.append(req)
+            for req in done:
+                rep.active.remove(req)
+                self.completed += 1
+        self._place(self.prefill_queue, "prefill")
+        self._place(self.handoff_queue, "decode")
+        for rep in self.replicas:
+            if rep.state == "draining" and not rep.active:
+                rep.state = "down"
+        counts = {}
+        for role in self.ROLE_SPECS:
+            n = len(self._of_role(role, "up", "draining"))
+            counts[role] = n
+            lo, hi = self.autoscaler.bounds(
+                role, len(self._of_role(role, "up", "draining", "down")))
+            if not lo <= n <= hi:
+                self.bounds_ok = False
+        self.replica_trace.append(counts)
+        self.tick_now += 1
+
+    def pending(self) -> int:
+        return (len(self.prefill_queue) + len(self.handoff_queue)
+                + sum(len(r.active) for r in self.replicas))
+
+    def run(self, max_ticks: int = 10_000) -> dict:
+        while (self.tick_now < len(self.trace) or self.pending()):
+            if self.tick_now >= max_ticks:
+                break
+            self.step()
+        return self.results()
+
+    def results(self) -> dict:
+        peak = {role: max(tr[role] for tr in self.replica_trace)
+                for role in self.ROLE_SPECS} if self.replica_trace else {}
+        return {
+            "arrived": self.arrived,
+            "completed": self.completed,
+            "lost": self.arrived - self.completed - self.pending(),
+            "pending": self.pending(),
+            "ticks": self.tick_now,
+            "bounds_respected": self.bounds_ok,
+            "peak_replicas": peak,
+            "scale_ups": self.autoscaler.scale_ups,
+            "scale_downs": self.autoscaler.scale_downs,
+            "events": [dataclasses.asdict(e)
+                       for e in self.autoscaler.events],
+        }

@@ -43,10 +43,21 @@ request).  ``--fault-schedule`` injects reproducible chaos — either
 explicit ``TICK:ACTION:REPLICA[:ARG[:TICKS]]`` entries (e.g.
 ``"8:kill:1,30:rejoin:1"``) or ``"seed=SEED"`` for a generated schedule;
 the run asserts zero lost requests.
+
+``--roles "prefill=N,decode=M[,unified=K]"`` splits the replica pool by
+role (counts must sum to ``--replicas``): a ``runtime.disagg``
+``DisaggRouter`` places fresh requests on prefill workers and hands
+finished prefills' KV chains off to decode slots.  ``--autoscale-policy
+queue-depth|slo-backlog`` attaches an elastic ``runtime.autoscale``
+``Autoscaler`` (``--min-replicas``/``--max-replicas`` per-role bounds,
+``--scale-cooldown`` anti-flap freeze); ``--max-replicas`` above a
+role's initial count provisions cold DOWN spares for scale-up to
+rejoin.  See docs/disagg_autoscale.md.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -55,7 +66,9 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import LM, RuntimeKnobs
+from repro.runtime.autoscale import AUTOSCALE_POLICIES, Autoscaler
 from repro.runtime.cluster import ROUTER_POLICIES, ClusterRouter
+from repro.runtime.disagg import ROLES, DisaggRouter
 from repro.runtime.draft import DRAFTERS
 from repro.runtime.fault import ReplicaFaultInjector
 from repro.runtime.scheduler import ADMISSION_POLICIES, VICTIM_POLICIES
@@ -83,6 +96,32 @@ def parse_tenant_weights(spec: str) -> dict:
             raise ValueError(f"weight for {name!r} must be > 0, "
                              f"got {weight}")
         out[name] = weight
+    return out
+
+
+def parse_roles(spec: str) -> dict:
+    """``"prefill=2,decode=1"`` -> ``{"prefill": 2, "decode": 1}``.
+    Raises ``ValueError`` (an argparse usage error) on unknown roles,
+    duplicates, or non-positive counts."""
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        role, eq, n = part.partition("=")
+        role = role.strip()
+        if not eq or role not in ROLES:
+            raise ValueError(f"expected ROLE=COUNT with ROLE in "
+                             f"{'/'.join(ROLES)}, got {part!r}")
+        if role in out:
+            raise ValueError(f"role {role!r} listed twice")
+        count = int(n)  # ValueError on junk -> argparse usage error
+        if count <= 0:
+            raise ValueError(f"count for {role!r} must be > 0, "
+                             f"got {count}")
+        out[role] = count
+    if not out:
+        raise ValueError("empty --roles spec")
     return out
 
 
@@ -132,6 +171,21 @@ def main():
     ap.add_argument("--router-policy", choices=sorted(ROUTER_POLICIES),
                     default="spread",
                     help="replica placement policy (with --replicas > 1)")
+    ap.add_argument("--roles", type=parse_roles, default=None,
+                    metavar="ROLE=N,...",
+                    help="disaggregate the pool: 'prefill=N,decode=M"
+                         "[,unified=K]' (counts must sum to --replicas)")
+    ap.add_argument("--autoscale-policy",
+                    choices=sorted(AUTOSCALE_POLICIES), default=None,
+                    help="attach an elastic autoscaler (needs --roles)")
+    ap.add_argument("--min-replicas", type=int, default=None,
+                    help="per-role floor for scale-down (default 1)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="per-role ceiling; above a role's initial count "
+                         "this provisions cold spares for scale-up")
+    ap.add_argument("--scale-cooldown", type=int, default=None,
+                    help="ticks a role is frozen after a scale event "
+                         "(default 10)")
     ap.add_argument("--fault-schedule", default=None,
                     metavar="T:ACT:R[,...]|seed=N",
                     help="inject chaos: 'TICK:ACTION:REPLICA[:ARG[:TICKS]]"
@@ -154,6 +208,44 @@ def main():
         ap.error(f"--speculate needs --draft-k >= 1 (got {args.draft_k})")
     if args.replicas < 1:
         ap.error(f"--replicas must be >= 1 (got {args.replicas})")
+    if args.roles is not None:
+        total = sum(args.roles.values())
+        if total != args.replicas:
+            ap.error(f"--roles counts sum to {total} but --replicas is "
+                     f"{args.replicas} — pass --replicas {total}")
+        have = set(args.roles)
+        if not have & {"prefill", "unified"}:
+            ap.error("--roles needs a prefill-capable role "
+                     "(prefill or unified)")
+        if not have & {"decode", "unified"}:
+            ap.error("--roles needs a decode-capable role "
+                     "(decode or unified)")
+        if args.mode != "continuous":
+            ap.error(f"--roles needs --mode continuous "
+                     f"(got {args.mode!r})")
+    elif args.autoscale_policy is not None:
+        ap.error("--autoscale-policy needs --roles")
+    if args.autoscale_policy is None:
+        for flag, val in (("--min-replicas", args.min_replicas),
+                          ("--max-replicas", args.max_replicas),
+                          ("--scale-cooldown", args.scale_cooldown)):
+            if val is not None:
+                ap.error(f"{flag} needs --autoscale-policy")
+    else:
+        min_r = 1 if args.min_replicas is None else args.min_replicas
+        if min_r < 1:
+            ap.error(f"--min-replicas must be >= 1 (got {min_r})")
+        if min_r > min(args.roles.values()):
+            ap.error(f"--min-replicas {min_r} exceeds the smallest "
+                     f"initial role count {min(args.roles.values())}")
+        if (args.max_replicas is not None
+                and args.max_replicas < max(args.roles.values())):
+            ap.error(f"--max-replicas {args.max_replicas} is below the "
+                     f"largest initial role count "
+                     f"{max(args.roles.values())}")
+        if args.scale_cooldown is not None and args.scale_cooldown < 0:
+            ap.error(f"--scale-cooldown must be >= 0 "
+                     f"(got {args.scale_cooldown})")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
@@ -177,7 +269,41 @@ def main():
         return ServeEngine(model, params, serve_cfg)
 
     router = None
-    if args.replicas > 1 or args.fault_schedule:
+    if args.roles is not None:
+        # role list rid-by-rid; indices past a role's initial count are
+        # cold DOWN spares the autoscaler can rejoin under load
+        cap = (args.max_replicas if args.autoscale_policy
+               and args.max_replicas is not None else None)
+        role_list, start_down = [], []
+        for role, count in args.roles.items():
+            for i in range(max(count, cap or 0)):
+                if i >= count:
+                    start_down.append(len(role_list))
+                role_list.append(role)
+
+        def make_role_engine(rid):
+            return ServeEngine(model, params, dataclasses.replace(
+                serve_cfg, role=role_list[rid]))
+
+        injector = (ReplicaFaultInjector.parse(args.fault_schedule)
+                    if args.fault_schedule else None)
+        router = DisaggRouter(make_role_engine, len(role_list),
+                              roles=role_list, start_down=start_down,
+                              policy=args.router_policy,
+                              miss_threshold=args.miss_threshold,
+                              retry_budget=args.retry_budget,
+                              tenant_weights=args.tenant_weights or {},
+                              injector=injector, telemetry=tm)
+        if args.autoscale_policy:
+            router.autoscaler = Autoscaler(
+                router, args.autoscale_policy,
+                min_replicas=(1 if args.min_replicas is None
+                              else args.min_replicas),
+                max_replicas=cap,
+                cooldown=(10 if args.scale_cooldown is None
+                          else args.scale_cooldown),
+                telemetry=tm)
+    elif args.replicas > 1 or args.fault_schedule:
         injector = (ReplicaFaultInjector.parse(args.fault_schedule)
                     if args.fault_schedule else None)
         router = ClusterRouter(make_engine, args.replicas,
@@ -219,6 +345,16 @@ def main():
               f"brownout-ticks={st['brownout_ticks']}")
         lost = [r.req_id for r in done if r.finish_reason == "failed"]
         assert not lost, f"requests lost despite recovery: {lost}"
+        if args.roles is not None:
+            print(f"disagg: roles={{{','.join(f'{r}={n}' for r, n in args.roles.items())}}} "
+                  f"handoffs={st['handoffs_done']} "
+                  f"backpressure={st['handoff_backpressure']} "
+                  f"in-transit={st['handoffs_in_transit']}")
+        if getattr(router, "autoscaler", None) is not None:
+            asst = router.autoscaler.stats()
+            print(f"autoscale: policy={asst['policy']} "
+                  f"ups={asst['scale_ups']} downs={asst['scale_downs']} "
+                  f"retiring={asst['retiring']}")
     if args.preempt and router is None:
         print(f"preemptions: {engine.scheduler.preempted_total} "
               f"(requests preempted >=1x: "

@@ -15,9 +15,9 @@ from .layers import chunked_ce_loss, embed, embedding_init, rmsnorm, rmsnorm_ini
 from .transformer import (apply_blocks, apply_blocks_decode,
                           apply_blocks_prefill_chunk, cache_batch_axes,
                           copy_cache_in, copy_cache_out, copy_cache_pages,
-                          init_blocks, init_cache, init_cache_paged,
-                          supports_chunked_prefill, supports_paged_cache,
-                          supports_speculative)
+                          copy_cache_pages_across, init_blocks, init_cache,
+                          init_cache_paged, supports_chunked_prefill,
+                          supports_paged_cache, supports_speculative)
 
 MOE_LB_COEF = 0.01
 MOE_Z_COEF = 1e-3
@@ -225,6 +225,11 @@ class LM:
         """Device half of CoW: duplicate physical page src -> dst in every
         layer pool."""
         return copy_cache_pages(caches, src, dst)
+
+    def copy_cache_pages_across(self, src_caches, dst_caches, src_idx, dst_idx):
+        """Cross-engine page transfer: gather ``src_idx`` pages from one
+        pool, scatter them at ``dst_idx`` in another (disagg handoff)."""
+        return copy_cache_pages_across(src_caches, dst_caches, src_idx, dst_idx)
 
     # ------------------------------------------------- checkpoint/restore
     def cache_batch_axes(self, max_len: int):

@@ -594,3 +594,24 @@ def copy_cache_pages(caches, src, dst):
         return jax.lax.dynamic_update_slice_in_dim(leaf, page, dst, axis=ax)
 
     return jax.tree.map(cp, caches)
+
+
+def copy_cache_pages_across(src_caches, dst_caches, src_idx, dst_idx):
+    """Gather pages ``src_idx`` from one engine's paged pools and scatter
+    them at ``dst_idx`` in another's — the device half of a cross-engine
+    page-chain transfer (disaggregated prefill -> decode handoff).
+
+    ``src_idx``/``dst_idx`` are equal-length int32 vectors; padding both
+    with 0 makes the extra rows copy the source null page onto the
+    destination null page, which no reader ever depends on, so the
+    vectors can be padded to a static width and the copy compiles once
+    per width.  Both trees must share the plan (same stacked layer axes)
+    and page_size; pool sizes may differ."""
+    def cp(s_leaf, d_leaf):
+        ax = s_leaf.ndim - 4
+        s0 = jnp.moveaxis(s_leaf, ax, 0)
+        d0 = jnp.moveaxis(d_leaf, ax, 0)
+        d0 = d0.at[dst_idx].set(s0[src_idx])
+        return jnp.moveaxis(d0, 0, ax)
+
+    return jax.tree.map(cp, src_caches, dst_caches)

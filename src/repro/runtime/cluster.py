@@ -157,6 +157,7 @@ def reset_for_replay(req: Request) -> Request:
     req._ckpt_pages = None
     req._preempted = False
     req._drf_charged = None
+    req._handoff_kv = 0
     return req
 
 
@@ -167,13 +168,20 @@ class ReplicaHandle:
     toggles the ``ReplicaFaultInjector`` flips."""
 
     def __init__(self, rid: int, make_engine: Callable[[int], object],
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 start_down: bool = False):
         self.rid = rid
         self._make_engine = make_engine
         self.tm = telemetry
-        self.engine = make_engine(rid)
-        self._bind_engine()
-        self.state = ReplicaState.UP
+        if start_down:
+            # a cold spare: no engine until an autoscaler (or operator)
+            # rejoins it — costs a handle, not a model instance
+            self.engine = None
+            self.state = ReplicaState.DOWN
+        else:
+            self.engine = make_engine(rid)
+            self._bind_engine()
+            self.state = ReplicaState.UP
         self.misses = 0
         self.slow = False
         self.slow_until = -1
@@ -373,7 +381,8 @@ class ClusterRouter:
                  backoff_ticks: int = 2, tenant_weights: Optional[dict] = None,
                  injector: Optional[ReplicaFaultInjector] = None,
                  slow_cooldown: int = 20,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 start_down=()):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1: {n_replicas}")
         if miss_threshold < 1:
@@ -387,7 +396,10 @@ class ClusterRouter:
         self.injector = injector
         self.slow_cooldown = slow_cooldown
         self.tm = telemetry if telemetry is not None else Telemetry()
-        self.replicas = [ReplicaHandle(i, make_engine, telemetry=self.tm)
+        # ``start_down`` rids begin as cold spares (DOWN, no engine) an
+        # autoscaler can rejoin later without paying for them up front
+        self.replicas = [ReplicaHandle(i, make_engine, telemetry=self.tm,
+                                       start_down=(i in set(start_down)))
                          for i in range(n_replicas)]
         self.tick_count = 0
         self.queue: list[_RouterRequest] = []
@@ -455,6 +467,50 @@ class ClusterRouter:
                    for r in self.replicas
                    if r.state is not ReplicaState.DOWN)
 
+    def _recover_rr(self, rr: _RouterRequest, lost_rid: int) -> bool:
+        """Recover one request stranded by a lost replica: consume a
+        retry, fail it on budget exhaustion, otherwise rewind it for
+        deterministic replay and requeue at the FRONT with exponential
+        backoff.  Returns True if the request was requeued."""
+        tr = self.tm.trace
+        rr.retries += 1
+        rr.replica = None
+        if rr.retries > self.retry_budget:
+            rr.req.done = True
+            rr.req.state = RequestState.FINISHED
+            rr.req.finish_reason = "failed"
+            rr.req.t_finish = time.perf_counter()
+            self.failed += 1
+            self.finished.append(rr)
+            if tr.enabled:
+                tr.instant(ROUTER_PID, "request_failed",
+                           tid=rr.req.req_id, retries=rr.retries)
+            return False
+        reset_for_replay(rr.req)
+        rr.not_before = (self.tick_count
+                         + self.backoff_ticks * 2 ** (rr.retries - 1))
+        self.queue.insert(0, rr)
+        self.recoveries += 1
+        if tr.enabled:
+            # the REPLAY span covers backoff-to-re-placement; it
+            # closes in _place when the request lands again
+            tr.begin(ROUTER_PID, rr.req.req_id, "REPLAY",
+                     lost_replica=lost_rid, retry=rr.retries,
+                     not_before=rr.not_before)
+        return True
+
+    def _flight_extra(self) -> dict:
+        """Extra context merged into every fence's flight dump
+        (subclasses add in-transit state — e.g. the handoff queue)."""
+        return {}
+
+    def _sweep_lost(self, rh: ReplicaHandle) -> list:
+        """Collect router-held requests (outside ``placed``) stranded by
+        the loss of ``rh`` — DisaggRouter returns in-transit handoffs
+        whose source died.  Each return is recovered like a placed
+        victim."""
+        return []
+
     def _mark_lost(self, rh: ReplicaHandle) -> None:
         rh.state = ReplicaState.LOST
         rh.fence()
@@ -464,51 +520,33 @@ class ClusterRouter:
         # had open (in-flight requests mid-PREFILL/DECODE) so chaos
         # leaves no orphans, then record the fence itself
         tr.end_all(rh.rid, fenced=True)
-        n_failed = n_recovered = 0
         if tr.enabled:
             tr.instant(ROUTER_PID, "replica_lost", replica=rh.rid,
                        tick=self.tick_count,
                        in_flight=len(self.placed[rh.rid]))
+        failed_before = self.failed
+        recovered_before = self.recoveries
+        # snapshot in-transit state BEFORE the sweep removes dead-source
+        # entries: the post-mortem must show what was mid-flight at the
+        # instant of the fence
+        extra = self._flight_extra()
         # recover every in-flight request: FRONT of the queue, newest
         # last, so recovered work resumes before fresh arrivals place
         victims = self.placed[rh.rid]
         self.placed[rh.rid] = []
-        for rr in reversed(victims):
+        stranded = self._sweep_lost(rh)
+        for rr in reversed(victims + stranded):
             if rr.req.done:
                 self.finished.append(rr)
                 continue
-            rr.retries += 1
-            rr.replica = None
-            if rr.retries > self.retry_budget:
-                rr.req.done = True
-                rr.req.state = RequestState.FINISHED
-                rr.req.finish_reason = "failed"
-                rr.req.t_finish = time.perf_counter()
-                self.failed += 1
-                n_failed += 1
-                self.finished.append(rr)
-                if tr.enabled:
-                    tr.instant(ROUTER_PID, "request_failed",
-                               tid=rr.req.req_id, retries=rr.retries)
-                continue
-            reset_for_replay(rr.req)
-            rr.not_before = (self.tick_count
-                             + self.backoff_ticks * 2 ** (rr.retries - 1))
-            self.queue.insert(0, rr)
-            self.recoveries += 1
-            n_recovered += 1
-            if tr.enabled:
-                # the REPLAY span covers backoff-to-re-placement; it
-                # closes in _place when the request lands again
-                tr.begin(ROUTER_PID, rr.req.req_id, "REPLAY",
-                         lost_replica=rh.rid, retry=rr.retries,
-                         not_before=rr.not_before)
+            self._recover_rr(rr, rh.rid)
         # every fence ships its own post-mortem (covers retry
         # exhaustion too — failures happen only here)
         self.tm.dump_flight(
             f"fence-replica{rh.rid}",
-            extra={"tick": self.tick_count, "recovered": n_recovered,
-                   "failed": n_failed})
+            extra={"tick": self.tick_count,
+                   "recovered": self.recoveries - recovered_before,
+                   "failed": self.failed - failed_before, **extra})
 
     def _heartbeats(self) -> None:
         for rh in self.replicas:
@@ -567,14 +605,22 @@ class ClusterRouter:
                                           rr.seq))
         return list(self.queue)
 
+    def _accepts_new(self, rh: ReplicaHandle) -> bool:
+        """May fresh (router-queued) requests place on ``rh``?
+        DisaggRouter narrows this to prefill-capable roles — decode
+        replicas only receive handoffs."""
+        return True
+
     def _place(self) -> None:
         candidates = [rh for rh in self.replicas
-                      if rh.placeable(self.tick_count)]
+                      if rh.placeable(self.tick_count)
+                      and self._accepts_new(rh)]
         # a slow replica still serves its in-flight work, but only
         # receives new load when no healthy replica can take it
         fallback = [rh for rh in self.replicas
                     if rh.state is ReplicaState.UP and rh.slow
-                    and not rh.killed and rh.engine is not None]
+                    and not rh.killed and rh.engine is not None
+                    and self._accepts_new(rh)]
         for rr in self._placement_order():
             if rr.not_before > self.tick_count:
                 continue  # backing off; doesn't block the line
@@ -607,6 +653,12 @@ class ClusterRouter:
         return self.replicas[self.policy.select(fitting).replica]
 
     # ------------------------------------------------------------ harvest
+    def _can_retire(self, rh: ReplicaHandle) -> bool:
+        """May a drained-empty replica leave the pool?  DisaggRouter
+        holds retirement while an in-transit handoff still points at
+        ``rh``'s page pool."""
+        return True
+
     def _harvest(self) -> None:
         for rh in self.replicas:
             still = []
@@ -616,7 +668,8 @@ class ClusterRouter:
                 else:
                     still.append(rr)
             self.placed[rh.rid] = still
-            if rh.state is ReplicaState.DRAINING and not still:
+            if (rh.state is ReplicaState.DRAINING and not still
+                    and self._can_retire(rh)):
                 rh.state = ReplicaState.DOWN
                 rh.engine = None
 
@@ -673,6 +726,13 @@ class ClusterRouter:
         self._harvest()
         return emitted
 
+    def _pending_counts(self) -> tuple[int, int]:
+        """(queued, in-flight) requests still owed an outcome — the
+        ``run()`` loop condition.  DisaggRouter counts in-transit
+        handoffs as in-flight so the loop never exits mid-transfer."""
+        return (len(self.queue),
+                sum(len(v) for v in self.placed.values()))
+
     def run(self, max_ticks: int = 10_000,
             on_stall: str = "raise") -> list[Request]:
         """Drive ticks until every submitted request is done (finished
@@ -684,11 +744,11 @@ class ClusterRouter:
             raise ValueError(f"on_stall must be 'raise' or 'warn': "
                              f"{on_stall!r}")
         ticks = 0
-        while self.queue or any(self.placed[r.rid] for r in self.replicas):
+        while sum(self._pending_counts()):
             if ticks >= max_ticks:
-                queued = len(self.queue)
-                live = sum(len(v) for v in self.placed.values())
-                msg = (f"ClusterRouter.run() exhausted {max_ticks} ticks "
+                queued, live = self._pending_counts()
+                msg = (f"{type(self).__name__}.run() exhausted "
+                       f"{max_ticks} ticks "
                        f"with {queued + live} requests undrained "
                        f"({queued} queued, {live} in flight)")
                 if on_stall == "raise":

@@ -505,6 +505,38 @@ class KVCacheManager:
         self.page_table[slot, :] = 0
         self.page_table[slot, :len(pages)] = pages
 
+    # ------------------------------------------------- cross-engine transfer
+    def can_adopt(self, n: int) -> bool:
+        """Could ``adopt_chain(n)`` succeed right now?  Evictable
+        prefix-cache pages count — ``adopt_chain`` evicts them itself."""
+        avail = self.pool.available
+        if self.prefix is not None:
+            avail += self.prefix.evictable()
+        return n <= avail and n <= self.max_pages
+
+    def adopt_chain(self, n: int) -> Optional[list[int]]:
+        """Allocate ``n`` fresh pages in THIS pool to receive a page
+        chain detached from *another* engine's pool — the destination
+        half of a cross-engine handoff.  ``None`` = backpressure (the
+        handoff stays queued).  The caller copies the K/V bytes across
+        (``copy_cache_pages_across``) and then calls the source pool's
+        ``release_chain`` on the old pages, keeping both pools
+        refcount-balanced."""
+        if n > self.max_pages:
+            return None
+        if self.pool.available < n and self.prefix is not None:
+            self.prefix.evict(n - self.pool.available)
+        if self.pool.available < n:
+            return None
+        return self.pool.alloc(n)
+
+    def release_chain(self, pages: list[int]) -> None:
+        """Drop a detached chain's hold on THIS pool — the source half of
+        a completed cross-engine transfer (or a discarded checkpoint).
+        The inverse of the hold ``detach_slot`` handed the caller."""
+        for pg in pages:
+            self.pool.decref(pg)
+
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:
         """Legacy stats dict, read back through the metrics registry

@@ -354,7 +354,12 @@ class Scheduler:
         accounts for — speculation changes *when* KV is written, never
         how much is reserved."""
         if getattr(req, "_preempted", False) and self.kv is not None:
-            return ServeResource(slots=1, kv=0)
+            # an in-engine resume re-takes only the slot (the chain never
+            # left this pool, its charge rode along on ``_drf_charged``);
+            # a *handed-off* arrival adopted its chain into THIS pool
+            # during the cross-engine transfer, so the charge lands here
+            return ServeResource(
+                slots=1, kv=float(getattr(req, "_handoff_kv", 0) or 0))
         if self.kv is not None:
             kv = self.kv.blocks_needed(len(req.prompt), req.max_new_tokens)
         else:

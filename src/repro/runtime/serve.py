@@ -304,6 +304,10 @@ class ServeConfig:
     victim_policy: str = "youngest-first"
     draft_k: int = 0
     drafter: str = "ngram"
+    # disaggregated serving role (runtime/disagg.py): "prefill" engines
+    # run chunked prefill and surrender the finished slot to a handoff;
+    # "decode" engines only accept handed-off (checkpointed) requests
+    role: str = "unified"
 
 
 _CONFIG_FIELDS = {f.name for f in dataclasses.fields(ServeConfig)}
@@ -338,6 +342,18 @@ class ServeEngine:
                              "(wave slots drain in lockstep)")
         if config.draft_k < 0:
             raise ValueError(f"draft_k must be >= 0: {config.draft_k}")
+        if config.role not in ("unified", "prefill", "decode"):
+            raise ValueError(f"unknown role {config.role!r} "
+                             f"(expected unified/prefill/decode)")
+        if config.role != "unified":
+            if config.mode != "continuous":
+                raise ValueError("disaggregated roles require "
+                                 "mode='continuous'")
+            if not model.supports_chunked_prefill():
+                raise ValueError(
+                    f"disaggregated roles need chunked prefill, unsupported "
+                    f"for family={model.cfg.family!r} (token-feed prefill "
+                    f"cannot hand off mid-prompt)")
         if config.draft_k:
             if config.mode != "continuous":
                 raise ValueError("speculative decode (draft_k > 0) requires "
@@ -353,6 +369,7 @@ class ServeEngine:
         self.config = config
         self.model = model
         self.params = params
+        self.role = config.role
         self.slots = config.batch_slots
         self.max_len = config.max_len
         self.mode = config.mode
@@ -578,6 +595,10 @@ class ServeEngine:
         return jax.jit(reset, donate_argnums=(0,))
 
     def submit(self, req: Request) -> RequestHandle:
+        if self.role == "decode" and not getattr(req, "_preempted", False):
+            raise ValueError(
+                "decode-role engines only accept handed-off (checkpointed) "
+                "requests — route fresh requests to a prefill replica")
         if not 0 < len(req.prompt) < self.max_len:
             raise ValueError(
                 f"prompt length {len(req.prompt)} outside [1, "
@@ -680,8 +701,42 @@ class ServeEngine:
         req._ckpt = None
         req._ckpt_pages = None
         req._preempted = False
+        req._handoff_kv = 0  # adopted chain now charged via _drf_charged
         self._set_state(req, RequestState.DECODE, resume=True,
                         pos=int(self.pos[s]))
+
+    def release(self, req: Request) -> Checkpoint:
+        """Voluntarily checkpoint a *running* request so its KV can move
+        to another engine (the disagg handoff / drain-migration path).
+
+        Same device capture as ``_execute_preemption`` — paged detaches
+        the slot's page chain zero-copy, dense snapshots the cache stripe
+        to host — but the request is *leaving this engine*: its trace
+        span stream on this pid is ended (not transitioned), the
+        scheduler is credited the full DRF charge (slot AND chain — the
+        pages depart with the request), and the caller re-submits the
+        checkpointed request to the destination engine, which resumes it
+        at ``pos = checkpoint`` with no prefill re-run."""
+        s = next(i for i, r in enumerate(self.active) if r is req)
+        if self.kv is not None:
+            req._ckpt_pages = self.kv.detach_slot(s)
+            kv_snap = None
+        else:
+            self._ensure_ckpt_fns()
+            kv_snap = jax.device_get(self._copy_out(self.caches,
+                                                    jnp.int32(s)))
+        req._ckpt = Checkpoint(pos=int(self.pos[s]),
+                               last_token=int(self.tokens[s, 0]),
+                               pages=getattr(req, "_ckpt_pages", None),
+                               kv=kv_snap)
+        req.state = RequestState.PREEMPTED
+        self.tm.req_end(self.replica, req.req_id, reason="handoff",
+                        pos=req._ckpt.pos)
+        req.preempt_count += 1
+        req._preempted = True
+        self._clear_slot(s)
+        self.scheduler.on_finish(req)  # full DRF credit: the chain leaves
+        return req._ckpt
 
     def _execute_admission(self, adm):
         """Executor half of admission: apply one scheduler decision —
@@ -843,6 +898,12 @@ class ServeEngine:
         self._admit_emitted = 0
         self._admit_continuous()
         emitted = self._admit_emitted  # first tokens from chunked prefill
+        if self.role == "prefill":
+            # prefill workers never decode: chunked prefill completed
+            # atomically inside admission (emitting the first token), and
+            # the router extracts the finished slot as a handoff this same
+            # tick — so the decode phase below would only burn a step
+            return emitted
         live = sum(r is not None for r in self.active)
         if not live:
             return emitted

@@ -1,0 +1,416 @@
+"""Disaggregated prefill/decode serving: roles, KV handoff, chaos.
+
+The disagg contract under test everywhere: splitting the pool into
+prefill and decode workers is invisible in the token streams — every
+request's output is bitwise-identical to the unified single-engine
+run (greedy and seeded-sampled, dense and paged), through backpressure,
+replica retirement, and chaos kills mid-handoff.
+"""
+import dataclasses
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import tiny_lm
+from repro.runtime.cluster import ReplicaState
+from repro.runtime.disagg import (ROLES, DisaggRouter, Handoff,
+                                  transfer_chain)
+from repro.runtime.fault import FaultEvent, ReplicaFaultInjector
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.serve import Request, ServeConfig, ServeEngine
+from repro.runtime.telemetry import Telemetry, validate_chrome_trace
+
+_PAGED = dict(cache="paged", page_size=8, prefix_cache=False)
+
+
+def _role_factory(roles, **kw):
+    """make_engine(rid) that builds each replica with its role's
+    ``ServeConfig.role`` (fresh engine per call)."""
+    model, params = tiny_lm()
+    base = ServeConfig(**{"batch_slots": 2, "max_len": 64, **kw})
+
+    def make(rid):
+        return ServeEngine(model, params,
+                           dataclasses.replace(base, role=roles[rid]))
+
+    return make
+
+
+def _router(roles, *, engine_kw=None, **kw):
+    roles = list(roles)
+    return DisaggRouter(_role_factory(roles, **(engine_kw or {})),
+                        len(roles), roles=roles, **kw)
+
+
+def _reqs(n=4, *, max_new=8, seed=0, base_id=100):
+    """Mixed greedy / seeded-sampled request set (the bitwise contract
+    must hold for both sampler paths)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        prompt = rng.integers(1, 60,
+                              size=int(rng.integers(3, 9))).astype(np.int32)
+        sp = SamplingParams(temperature=0.8 if i % 2 else 0.0, seed=7)
+        out.append(Request(base_id + i, prompt, max_new_tokens=max_new,
+                           sampling=sp,
+                           tenant="gold" if i % 3 == 0 else "free"))
+    return out
+
+
+def _fresh(reqs):
+    return [dataclasses.replace(r, prompt=np.asarray(r.prompt), output=[])
+            for r in reqs]
+
+
+def _reference(reqs, **kw):
+    """Unified single-engine outputs for a request set."""
+    model, params = tiny_lm()
+    eng = ServeEngine(model, params,
+                      ServeConfig(**{"batch_slots": 2, "max_len": 64, **kw}))
+    for r in _fresh(reqs):
+        eng.submit(r)
+    return {r.req_id: list(r.output) for r in eng.run()}
+
+
+def _assert_pools_balanced(router):
+    for rh in router.replicas:
+        if rh.engine is not None and rh.engine.kv is not None:
+            pool = rh.engine.kv.pool
+            assert pool.in_use == 0, f"replica {rh.rid} leaked pages"
+            assert not np.any(np.asarray(pool.ref[1:]))
+
+
+# ------------------------------------------------------------------- roles
+def test_role_validation():
+    with pytest.raises(ValueError, match="2 entries for 3"):
+        DisaggRouter(_role_factory(["prefill", "decode", "decode"]), 3,
+                     roles=["prefill", "decode"])
+    with pytest.raises(ValueError, match="unknown roles"):
+        _router(["prefill", "verify"])
+    with pytest.raises(ValueError, match="prefill-capable"):
+        _router(["decode", "decode"])
+    with pytest.raises(ValueError, match="decode-capable"):
+        _router(["prefill", "prefill"])
+    # a DOWN spare does not count toward initial capability
+    with pytest.raises(ValueError, match="decode-capable"):
+        _router(["prefill", "decode"], start_down=(1,))
+
+
+def test_serve_config_role_validation():
+    model, params = tiny_lm()
+    with pytest.raises(ValueError, match="role"):
+        ServeEngine(model, params, ServeConfig(role="verify"))
+    with pytest.raises(ValueError, match="continuous"):
+        ServeEngine(model, params, ServeConfig(role="prefill",
+                                               mode="wave"))
+
+
+def test_decode_engine_rejects_fresh_requests():
+    model, params = tiny_lm()
+    eng = ServeEngine(model, params, ServeConfig(role="decode"))
+    with pytest.raises(ValueError, match="handed-off"):
+        eng.submit(Request(1, np.array([3, 4], np.int32),
+                           max_new_tokens=2))
+
+
+def test_router_places_fresh_only_on_prefill_capable():
+    router = _router(["prefill", "decode"])
+    for r in _reqs(4):
+        router.submit(r)
+    router.step()
+    # anything on the decode replica arrived via handoff (placed on the
+    # prefill replica first), never as a fresh placement
+    assert all(rr.history[0] == 0 for rr in router.placed[1])
+    assert not router._accepts_new(router.replicas[1])
+    assert router._accepts_new(router.replicas[0])
+
+
+# ----------------------------------------------------- cross-pool transfer
+def test_transfer_chain_refcount_balanced():
+    """Satellite regression: the cross-pool path moves a chain's pages
+    without leaking a refcount in either pool — source frees exactly
+    the chain, destination holds exactly the chain, and finishing the
+    request drains the destination back to empty."""
+    model, params = tiny_lm()
+    cfg = ServeConfig(batch_slots=2, max_len=64, **_PAGED)
+    src = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="prefill"))
+    dst = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="decode"))
+    req = _reqs(1, max_new=6)[0]
+    src.submit(req)
+    for _ in range(10):
+        src.step()
+        if req.output:
+            break
+    assert req.output  # prefill done, first token out
+    ck = src.release(req)
+    n = len(ck.pages)
+    assert n > 0
+    assert src.kv.pool.in_use == n  # checkpoint still holds the chain
+    assert dst.kv.pool.in_use == 0
+    assert transfer_chain(src, dst, req)
+    assert src.kv.pool.in_use == 0  # source hold released
+    assert not np.any(np.asarray(src.kv.pool.ref[1:]))
+    assert dst.kv.pool.in_use == n  # destination adopted exactly n
+    dst.submit(req)
+    dst.run()
+    assert req.done
+    assert dst.kv.pool.in_use == 0  # drained after finish
+    assert not np.any(np.asarray(dst.kv.pool.ref[1:]))
+
+
+def test_transfer_chain_backpressure_leaves_source_intact():
+    """A destination with no room refuses the chain; the source pool
+    keeps its hold so the handoff can retry later."""
+    model, params = tiny_lm()
+    cfg = ServeConfig(batch_slots=2, max_len=64, **_PAGED)
+    src = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="prefill"))
+    dst = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="decode",
+                                          num_pages=2))
+    req = _reqs(1, max_new=6, seed=3)[0]
+    src.submit(req)
+    for _ in range(10):
+        src.step()
+        if req.output:
+            break
+    ck = src.release(req)
+    n = len(ck.pages)
+    held = src.kv.pool.in_use
+    if n <= 1:  # need a chain the 2-page pool (1 null + 1 free) can't fit
+        pytest.skip("prompt fit one page; backpressure needs > 1")
+    assert not transfer_chain(src, dst, req)
+    assert src.kv.pool.in_use == held  # nothing released
+    assert dst.kv.pool.in_use == 0  # nothing half-adopted
+
+
+def test_dense_checkpoint_transfer_is_free():
+    model, params = tiny_lm()
+    cfg = ServeConfig(batch_slots=2, max_len=64)
+    src = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="prefill"))
+    dst = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="decode"))
+    req = _reqs(1, max_new=4)[0]
+    src.submit(req)
+    for _ in range(10):
+        src.step()
+        if req.output:
+            break
+    ck = src.release(req)
+    assert ck.pages is None and ck.kv is not None  # host snapshot
+    assert transfer_chain(src, dst, req)  # nothing to move
+
+
+# ----------------------------------------------------------- bitwise runs
+@pytest.mark.parametrize("engine_kw", [{}, _PAGED],
+                         ids=["dense", "paged"])
+def test_disagg_bitwise_identical_to_unified(engine_kw):
+    """The tentpole contract: prefill/decode split with KV handoff
+    emits bitwise-identical streams (mixed greedy + seeded-sampled)."""
+    reqs = _reqs(6, max_new=10, seed=2)
+    ref = _reference(reqs, **engine_kw)
+    router = _router(["prefill", "decode", "decode"],
+                     engine_kw=engine_kw)
+    for r in _fresh(reqs):
+        router.submit(r)
+    done = router.run(max_ticks=500)
+    st = router.stats()
+    assert st["handoffs_done"] == 6  # every request crossed the split
+    assert st["handoffs_in_transit"] == 0
+    assert {r.req_id: list(r.output) for r in done} == ref
+    _assert_pools_balanced(router)
+
+
+def test_handoff_backpressure_queues_and_completes():
+    """One single-slot decode replica: handoffs outnumber slots, queue
+    under backpressure, and still all complete bitwise."""
+    reqs = _reqs(5, max_new=8, seed=4)
+    ref = _reference(reqs, **_PAGED)
+    router = _router(["prefill", "decode"],
+                     engine_kw=dict(_PAGED, batch_slots=1))
+
+    # reference uses 2 slots; re-run it with 1 to match admission order
+    model, params = tiny_lm()
+    eng = ServeEngine(model, params,
+                      ServeConfig(batch_slots=1, max_len=64, **_PAGED))
+    for r in _fresh(reqs):
+        eng.submit(r)
+    ref = {r.req_id: list(r.output) for r in eng.run()}
+
+    for r in _fresh(reqs):
+        router.submit(r)
+    done = router.run(max_ticks=500)
+    st = router.stats()
+    assert st["handoff_backpressure"] >= 1
+    assert st["handoffs_done"] == 5
+    assert {r.req_id: list(r.output) for r in done} == ref
+    _assert_pools_balanced(router)
+
+
+def test_unified_role_in_disagg_pool():
+    """A unified replica both prefills and decodes alongside the split
+    pool; no handoff is required for its requests."""
+    reqs = _reqs(4, max_new=6, seed=6)
+    ref = _reference(reqs)
+    router = _router(["unified", "unified"])
+    for r in _fresh(reqs):
+        router.submit(r)
+    done = router.run(max_ticks=300)
+    assert router.stats()["handoffs_done"] == 0
+    assert {r.req_id: list(r.output) for r in done} == ref
+
+
+# ------------------------------------------------------------------ chaos
+def _drive_until_handoff_from(router, src_rid, max_ticks=60):
+    for _ in range(max_ticks):
+        router.step()
+        if any(h.src == src_rid for h in router.handoffs):
+            return True
+    return False
+
+
+@pytest.mark.parametrize("engine_kw", [{}, _PAGED],
+                         ids=["dense", "paged"])
+def test_chaos_kill_prefill_mid_handoff_bitwise(engine_kw):
+    """ISSUE acceptance: a prefill replica dies while its handoffs sit
+    in transit (paged chains still in the dying pool).  The sweep feeds
+    them through deterministic replay and every continuation is bitwise
+    intact."""
+    reqs = _reqs(6, max_new=10, seed=8)
+    ref = _reference(reqs, **engine_kw)
+    # single-slot decode replica keeps the handoff queue non-empty;
+    # prefill work spreads over replicas 0 and 1
+    router = _router(["prefill", "prefill", "decode"],
+                     engine_kw=dict(engine_kw, batch_slots=1),
+                     miss_threshold=1)
+    for r in _fresh(reqs):
+        router.submit(r)
+    assert _drive_until_handoff_from(router, 1)
+    in_flight = [h.rr.req.req_id for h in router.handoffs if h.src == 1]
+    router.replicas[1].killed = True  # dies mid-handoff
+    done = router.run(max_ticks=800)
+    st = router.stats()
+    assert st["replicas_lost"] == 1
+    assert st["recoveries"] >= len(in_flight) >= 1
+    assert st["failed"] == 0
+    assert {r.req_id: list(r.output) for r in done} == ref
+    _assert_pools_balanced(router)
+
+
+def test_fence_flight_dump_snapshots_handoff_queue(tmp_path):
+    """Satellite: the fence's flight dump carries the in-transit
+    handoff queue (request id, source replica, pages in flight) as it
+    stood at the instant of death — before the sweep clears it."""
+    tm = Telemetry(trace=True, flight=128, flight_dir=str(tmp_path))
+    reqs = _reqs(6, max_new=10, seed=8)
+    router = _router(["prefill", "prefill", "decode"],
+                     engine_kw=dict(_PAGED, batch_slots=1),
+                     miss_threshold=1, telemetry=tm)
+    for r in _fresh(reqs):
+        router.submit(r)
+    assert _drive_until_handoff_from(router, 1)
+    in_flight = {h.rr.req.req_id: h for h in router.handoffs
+                 if h.src == 1}
+    router.replicas[1].killed = True
+    router.run(max_ticks=800)
+    dumps = sorted(glob.glob(os.path.join(str(tmp_path), "flight_*.json")))
+    assert dumps
+    with open(dumps[0]) as f:
+        payload = json.load(f)
+    snap = {e["req_id"]: e for e in payload["handoffs_in_transit"]}
+    for rid, h in in_flight.items():
+        assert snap[rid]["src_replica"] == 1
+        assert snap[rid]["pages_in_flight"] == h.n_pages > 0
+        assert snap[rid]["target_role"] == "decode"
+    # spans stay balanced through the fence (HANDOFF closed by sweep)
+    assert validate_chrome_trace(tm.trace.to_chrome())["unbalanced"] == {}
+
+
+def test_chaos_injector_schedule_with_rejoin():
+    """Seeded-style explicit schedule through the injector path: kill a
+    prefill worker, rejoin it later, zero lost requests."""
+    reqs = _reqs(8, max_new=8, seed=9)
+    ref = _reference(reqs, **_PAGED)
+    inj = ReplicaFaultInjector([FaultEvent(3, "kill", 1),
+                                FaultEvent(20, "rejoin", 1)])
+    router = _router(["prefill", "prefill", "decode"],
+                     engine_kw=_PAGED, miss_threshold=1, injector=inj)
+    for r in _fresh(reqs):
+        router.submit(r)
+    done = router.run(max_ticks=800)
+    st = router.stats()
+    assert st["failed"] == 0
+    assert {r.req_id: list(r.output) for r in done} == ref
+    _assert_pools_balanced(router)
+
+
+# ----------------------------------------------------------- retire/drain
+def test_retire_migrates_work_and_reaches_down():
+    """Scale-down drain: running decodes checkpoint out of the retiree
+    and hand off to a sibling; the replica reaches DOWN only once no
+    in-transit handoff points at its pool, and outputs stay bitwise."""
+    reqs = _reqs(6, max_new=12, seed=10)
+    ref = _reference(reqs, **_PAGED)
+    router = _router(["unified", "unified", "decode"],
+                     engine_kw=_PAGED)
+    for r in _fresh(reqs):
+        router.submit(r)
+    for _ in range(3):
+        router.step()
+    assert any(len(router.placed[rid]) for rid in (0, 1))
+    victim = 0 if router.placed[0] else 1
+    router.retire(victim)
+    assert router.replicas[victim].state is ReplicaState.DRAINING
+    done = router.run(max_ticks=800)
+    assert router.replicas[victim].state is ReplicaState.DOWN
+    assert router.replicas[victim].engine is None
+    assert {r.req_id: list(r.output) for r in done} == ref
+    _assert_pools_balanced(router)
+    assert router.stats()["failed"] == 0
+
+
+def test_can_retire_blocks_on_in_transit_handoff():
+    router = _router(["prefill", "decode"])
+    rh = router.replicas[0]
+    assert router._can_retire(rh)
+    rr = type("RR", (), {"req": type("R", (), {"req_id": 1})()})()
+    router.handoffs.append(Handoff(rr=rr, src=0, n_pages=2, tick=0))
+    assert not router._can_retire(rh)
+    assert router._can_retire(router.replicas[1])
+    router.handoffs.clear()
+
+
+# -------------------------------------------------------------- telemetry
+def test_disagg_stats_and_gauges():
+    router = _router(["prefill", "decode"])
+    st = router.stats()
+    assert st["roles"] == {0: "prefill", 1: "decode"}
+    assert st["handoffs_done"] == 0
+    for r in _reqs(3, max_new=4):
+        router.submit(r)
+    router.run(max_ticks=300)
+    st = router.stats()
+    assert st["handoffs_done"] == 3
+    assert st["handoffs_in_transit"] == 0
+    v = router.tm.registry.value
+    assert v("disagg_handoffs_done") == 3
+
+
+def test_handoff_spans_balanced():
+    tm = Telemetry(trace=True)
+    router = _router(["prefill", "decode"], telemetry=tm)
+    for r in _reqs(4, max_new=6):
+        router.submit(r)
+    router.run(max_ticks=300)
+    summary = validate_chrome_trace(tm.trace.to_chrome())
+    assert summary["unbalanced"] == {}
+
+
+def test_roles_tuple_export():
+    assert ROLES == ("prefill", "decode", "unified")
