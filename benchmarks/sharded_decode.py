@@ -1,0 +1,142 @@
+"""Sharded decode vs the single-device engine: identity + throughput.
+
+Forces 8 host devices (the env vars must land before jax imports, so
+this benchmark always runs as its own process — ``scripts/check_bench.py``
+and ``scripts/ci.sh`` both launch it that way) and drives the same
+mixed greedy/seeded-sampled paged trace through three engines: the
+single-device baseline, a TP-2 mesh ``(1, 2)``, and a 2-host x TP-2
+mesh ``(2, 2)`` whose data axis shards the decode slots and splits the
+KV pool into per-host sub-pools.
+
+The structural gate is the tentpole invariant: both sharded engines'
+token streams must be BITWISE-identical to the baseline (sampled
+trajectories only match when every logit is bit-exact), and the 2-host
+engine's offer must advertise a per-host page split that sums to the
+aggregate.  Throughput is recorded per engine for trend tracking only —
+on a forced-host-device CPU mesh the collectives are emulated, so the
+sharded tok/s is a noise floor, not a speedup claim.
+
+    PYTHONPATH=src python benchmarks/sharded_decode.py [--dry]
+
+Emits BENCH_sharded_decode[_dry].json via ``common.emit_json``.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # python -m benchmarks.run / -m benchmarks.sharded_decode
+    from .common import emit_json, request_latency_stats
+except ImportError:  # python benchmarks/sharded_decode.py
+    sys.path.insert(0, os.path.dirname(__file__))
+    from common import emit_json, request_latency_stats
+from repro.configs import get_config
+from repro.models import LM, RuntimeKnobs
+from repro.runtime.serve import (Request, SamplingParams, ServeConfig,
+                                 ServeEngine)
+
+
+def mixed_trace(n_req, max_new, vocab, seed=7):
+    """Alternating greedy / seeded-sampled requests (the identity check
+    needs sampled rows: they only reproduce when logits are bit-exact)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_req):
+        prompt = rng.integers(1, vocab,
+                              size=int(rng.integers(3, 24))).astype(np.int32)
+        sp = (SamplingParams() if i % 2 == 0 else
+              SamplingParams(temperature=0.8, top_k=20, seed=i))
+        reqs.append(Request(i, prompt, max_new_tokens=max_new, sampling=sp))
+    return reqs
+
+
+def run_engine(model, params, reqs, *, reps, **cfg_kw):
+    eng = ServeEngine(model, params, ServeConfig(**cfg_kw))
+    # warmup rep compiles every step shape, then best-of-reps walls
+    wall = float("inf")
+    for rep in range(reps + 1):
+        for r in reqs:
+            eng.submit(Request(r.req_id, r.prompt.copy(),
+                               max_new_tokens=r.max_new_tokens,
+                               sampling=r.sampling))
+        t0 = time.perf_counter()
+        done = eng.run()
+        if rep:  # rep 0 pays the compiles
+            wall = min(wall, time.perf_counter() - t0)
+    toks = sum(len(r.output) for r in done)
+    out = {"requests": len(done), "tokens": int(toks), "wall_s": wall,
+           "tok_per_s": toks / max(wall, 1e-9)}
+    out.update(request_latency_stats(done))
+    return out, {r.req_id: tuple(r.output) for r in done}, eng
+
+
+def run(dry: bool = True, slots: int = 4, max_len: int = 64,
+        page_size: int = 16):
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              num_layers=2, vocab_size=64, d_model=64,
+                              num_heads=4, num_kv_heads=2, head_dim=16,
+                              d_ff=128)
+    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32, q_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    n_req, max_new, reps = (8, 6, 1) if dry else (24, 12, 3)
+    reqs = mixed_trace(n_req, max_new, cfg.vocab_size)
+
+    results = {"slots": slots, "max_len": max_len, "page_size": page_size,
+               "requests": n_req, "devices": jax.device_count()}
+    outs = {}
+    for name, shape in (("unsharded", None), ("tp2", (1, 2)),
+                        ("dp2tp2", (2, 2))):
+        r, outs[name], eng = run_engine(
+            model, params, reqs, reps=reps, batch_slots=slots,
+            max_len=max_len, cache="paged", page_size=page_size,
+            mesh_shape=shape)
+        results[name] = r
+        print(f"{name:9s}: {r['tokens']} tok in {r['wall_s']:.2f}s -> "
+              f"{r['tok_per_s']:.1f} tok/s")
+        if name == "dp2tp2":
+            off = eng.offer()
+            by_host = off["free_pages_by_host"]
+            results["offer_by_host"] = by_host
+            results["offer_by_host_sums"] = \
+                bool(sum(by_host) == off["free_pages"])
+    results["tp2_bitwise_identical"] = bool(outs["tp2"] == outs["unsharded"])
+    results["dp2tp2_bitwise_identical"] = \
+        bool(outs["dp2tp2"] == outs["unsharded"])
+    print(f"tp2 bitwise={results['tp2_bitwise_identical']} "
+          f"dp2tp2 bitwise={results['dp2tp2_bitwise_identical']} "
+          f"offer by host={results.get('offer_by_host')}")
+    emit_json("sharded_decode_dry" if dry else "sharded_decode", results)
+    assert results["tp2_bitwise_identical"], \
+        "TP-2 sharded decode diverged from the single-device engine"
+    assert results["dp2tp2_bitwise_identical"], \
+        "2-host TP-2 sharded decode diverged from the single-device engine"
+    assert results["offer_by_host_sums"], results
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="fast CI mode: tiny trace, 1 timed rep")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    args = ap.parse_args()
+    run(dry=args.dry, slots=args.slots, max_len=args.max_len,
+        page_size=args.page_size)
+
+
+if __name__ == "__main__":
+    main()

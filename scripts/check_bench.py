@@ -42,7 +42,8 @@ import sys
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 DEFAULT_NAMES = ("serve_throughput", "paged_serve", "spec_decode",
-                 "cluster_serve", "disagg_serve", "kernel_roofline")
+                 "cluster_serve", "disagg_serve", "kernel_roofline",
+                 "sharded_decode")
 
 # (json path into the payload, kind): kind "rate" = higher is better,
 # "latency" = lower is better, gated by the respective tolerance
@@ -81,6 +82,12 @@ METRICS = {
     # achieved roofline fractions: numerator is a pure function of the
     # HLO, so the ratio regresses exactly when the kernel's real speed
     # does (ROADMAP "roofline-gated" item)
+    # sharded decode: tok/s trends only — the identity/offer claims are
+    # BOUNDS (bitwise flags), machine-independent by construction
+    "sharded_decode": [
+        (("unsharded", "tok_per_s"), "rate"),
+        (("tp2", "tok_per_s"), "rate"),
+    ],
     "kernel_roofline": [
         (("dense_decode", "achieved_fraction"), "rate"),
         (("paged_decode", "achieved_fraction"), "rate"),
@@ -181,6 +188,14 @@ BOUNDS = {
          "simulator kept every role inside its min/max bounds"),
         (("sim", "scale_downs"), lambda v: v >= 1,
          "simulator churn exercised scale-down (drain-before-retire)"),
+    ],
+    "sharded_decode": [
+        (("tp2_bitwise_identical",), lambda v: bool(v),
+         "TP-2 sharded decode bitwise-identical to single-device"),
+        (("dp2tp2_bitwise_identical",), lambda v: bool(v),
+         "2-host TP-2 sharded decode bitwise-identical to single-device"),
+        (("offer_by_host_sums",), lambda v: bool(v),
+         "sharded offer's per-host page split sums to the aggregate"),
     ],
     "kernel_roofline": [
         (("dense_decode", "flops"), lambda v: v > 0,

@@ -8,7 +8,10 @@
 #   tier1  fast pytest lane:  -m "not slow"  (the per-push CI lane);
 #          with pytest-cov installed it also enforces a line-coverage
 #          floor over src/repro/runtime/ (skipped with a warning
-#          otherwise — containers without the plugin still gate tests)
+#          otherwise — containers without the plugin still gate tests);
+#          then the forced-8-device sharded-decode equality tests
+#          (tests/test_sharded_serve.py) and the doc link/flag checker
+#          (scripts/check_docs.py)
 #   smoke  per-arch smoke_all + serving launcher smokes (paged, every
 #          admission policy, preemption + weighted SLO tiers,
 #          speculative decode)
@@ -53,6 +56,16 @@ tier1() {
              "coverage floor (CI enforces it)"
         python -m pytest -x -q -m "not slow"
     fi
+
+    echo "== tier-1 sharded decode equality (forced 8-device host) =="
+    # the equality tests spawn their own 8-device subprocesses, but the
+    # env var on the runner pins the invariant this lane exists for:
+    # sharded == unsharded bitwise on a genuinely multi-device mesh
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python -m pytest -x -q tests/test_sharded_serve.py
+
+    echo "== doc link + flag checker =="
+    python scripts/check_docs.py
 }
 
 full_tests() {
@@ -88,6 +101,15 @@ smoke() {
         --trace-out artifacts/smoke_trace.json \
         --metrics-out artifacts/smoke_metrics.prom
     python -m repro.runtime.telemetry artifacts/smoke_trace.json
+
+    echo "== sharded decode smoke (launcher --tp / --mesh-shape) =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 6 --slots 2 --max-len 64 --max-new 6 --tp 2
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+        --requests 6 --slots 4 --max-len 64 --max-new 6 \
+        --mesh-shape 2,2 --cache paged
 
     echo "== speculative decode smoke (launcher, dense + paged) =="
     python -m repro.launch.serve --arch internlm2-1.8b --smoke \

@@ -15,14 +15,53 @@ import math
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+
+from repro.compat import AxisType, HAS_AXIS_TYPE
+from repro.compat import make_mesh as compat_make_mesh
+
+
+def _mesh(device_arr, axes):
+    """``Mesh`` over an explicit device array, Auto axis types where the
+    jax lineage has them (0.4.x predates the enum — plain Mesh there)."""
+    from jax.sharding import Mesh
+    if HAS_AXIS_TYPE:
+        try:
+            return Mesh(device_arr, axes,
+                        axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return Mesh(device_arr, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes,
+                            axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_serve_mesh(shape):
+    """Mesh for one sharded ``ServeEngine`` replica.
+
+    ``shape`` is ``(data, model)`` or ``(pod, data, model)`` — the same
+    axis names the serving shardings (``sharding/rules.py``'s
+    ``serve_param_shardings`` / ``ServeShardFn``) key on: "model" carries
+    tensor parallelism over heads/ff, the leading axes carry the decode
+    slots and KV page pool ("data" hosts in the Scylla sense).  Raises if
+    the product exceeds the visible device count, so a misconfigured
+    ``--mesh-shape`` fails at engine construction, not first dispatch.
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) not in (2, 3) or any(s < 1 for s in shape):
+        raise ValueError(f"mesh shape must be (data, model) or "
+                         f"(pod, data, model) of positive ints: {shape}")
+    n = math.prod(shape)
+    if n > len(jax.devices()):
+        raise ValueError(f"mesh shape {shape} needs {n} devices, "
+                         f"{len(jax.devices())} visible")
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    arr = np.array(jax.devices()[:n]).reshape(shape)
+    return _mesh(arr, axes)
 
 
 def make_job_mesh(n_chips: int, *, n_pods: int = 1, max_model: int = 16):
@@ -38,10 +77,11 @@ def make_job_mesh(n_chips: int, *, n_pods: int = 1, max_model: int = 16):
         model *= 2
     data = per_pod // model
     if n_pods > 1:
-        return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return compat_make_mesh((n_pods, data, model),
+                                ("pod", "data", "model"),
+                                axis_types=(AxisType.Auto,) * 3)
+    return compat_make_mesh((data, model), ("data", "model"),
+                            axis_types=(AxisType.Auto,) * 2)
 
 
 def submesh_for_placement(placement, cluster, devices=None, *,
@@ -63,7 +103,5 @@ def submesh_for_placement(placement, cluster, devices=None, *,
     arr = np.array(devices[:n_chips])
     if n_pods > 1:
         arr = arr.reshape(n_pods, data, model)
-        return Mesh(arr, ("pod", "data", "model"),
-                    axis_types=(AxisType.Auto,) * 3)
-    return Mesh(arr.reshape(data, model), ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+        return _mesh(arr, ("pod", "data", "model"))
+    return _mesh(arr.reshape(data, model), ("data", "model"))

@@ -7,6 +7,12 @@ decode engine over a synthetic request stream.
 ``--mode continuous`` (default) uses per-slot admission with chunked
 prefill; ``--mode wave`` runs the legacy lockstep baseline.
 
+``--tp N`` shards each engine replica over N devices (tensor parallel —
+mesh ``(1, N)``); ``--mesh-shape D,M`` (or ``P,D,M``) gives the full
+device mesh, with the leading data axes sharding the decode slots and
+splitting the paged KV pool into per-host sub-pools.  Sharded output is
+bitwise-identical to the single-device engine — see docs/serving.md.
+
 ``--policy fcfs|priority|sjf|drf-fair`` picks the admission policy;
 ``--tenants N`` spreads the synthetic requests round-robin over N tenants
 (tenant-0..tenant-N-1) so ``drf-fair`` has shares to balance.
@@ -125,6 +131,20 @@ def parse_roles(spec: str) -> dict:
     return out
 
 
+def parse_mesh_shape(spec: str) -> tuple:
+    """``"2,4"`` -> ``(2, 4)``: a (data, model) or (pod, data, model)
+    device-mesh shape.  Raises ``ValueError`` (an argparse usage error)
+    on junk so bad shapes fail at the CLI, not at engine construction."""
+    try:
+        shape = tuple(int(p) for p in spec.split(","))
+    except ValueError:
+        raise ValueError(f"expected comma-separated ints, got {spec!r}")
+    if len(shape) not in (2, 3) or any(s < 1 for s in shape):
+        raise ValueError(f"mesh shape must be D,M or P,D,M of positive "
+                         f"ints, got {spec!r}")
+    return shape
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
@@ -135,6 +155,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--mode", choices=("continuous", "wave"),
                     default="continuous")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="shard each replica over N devices (tensor "
+                         "parallel; shorthand for --mesh-shape 1,N)")
+    ap.add_argument("--mesh-shape", type=parse_mesh_shape, default=None,
+                    metavar="D,M",
+                    help="per-replica device mesh 'data,model' (or "
+                         "'pod,data,model'); data axes shard the decode "
+                         "slots + KV page pool across hosts")
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--policy", choices=sorted(ADMISSION_POLICIES),
                     default="fcfs", help="admission policy")
@@ -204,6 +232,16 @@ def main():
                     help="arm the flight recorder: dump the last N trace "
                          "events + metrics to artifacts/ on replica fence")
     args = ap.parse_args()
+    if args.tp < 1:
+        ap.error(f"--tp must be >= 1 (got {args.tp})")
+    if args.tp > 1 and args.mesh_shape is not None:
+        ap.error("--tp is shorthand for --mesh-shape 1,N — pass one "
+                 "or the other")
+    mesh_shape = (args.mesh_shape if args.mesh_shape is not None
+                  else ((1, args.tp) if args.tp > 1 else None))
+    if mesh_shape is not None and args.mode != "continuous":
+        ap.error(f"--mesh-shape/--tp need --mode continuous "
+                 f"(got {args.mode!r})")
     if args.speculate and args.draft_k <= 0:
         ap.error(f"--speculate needs --draft-k >= 1 (got {args.draft_k})")
     if args.replicas < 1:
@@ -259,7 +297,7 @@ def main():
         tenant_weights=args.tenant_weights, preempt=args.preempt,
         victim_policy=args.victim_policy,
         draft_k=args.draft_k if args.speculate else 0,
-        drafter=args.drafter)
+        drafter=args.drafter, mesh_shape=mesh_shape)
 
     tm = Telemetry(trace=bool(args.trace_out) or args.flight_recorder > 0,
                    flight=args.flight_recorder, flight_dir="artifacts")
@@ -334,9 +372,11 @@ def main():
     toks = sum(len(r.output) for r in done)
     ttft = [h.metrics().get("ttft_s") for h in handles]
     ttft = [t for t in ttft if t is not None]
+    mesh_note = (f" mesh={'x'.join(map(str, mesh_shape))}"
+                 if mesh_shape else "")
     print(f"arch={args.arch} mode={args.mode} cache={args.cache} "
-          f"policy={args.policy} served {len(done)} requests, {toks} "
-          f"tokens in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+          f"policy={args.policy}{mesh_note} served {len(done)} requests, "
+          f"{toks} tokens in {dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
     if router is not None:
         st = router.stats()
         print(f"cluster: replicas={args.replicas} "

@@ -57,11 +57,22 @@ def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
     return p
 
 
-def mlp(params, x, gated: bool):
+def mlp(params, x, gated: bool, shard_fn=lambda name, v: v):
+    """``shard_fn("mlp_up", ...)`` is the TP seam of the gather-form
+    serving layout (sharding/rules.py ``ServeShardFn``): it all-gathers
+    the ff-sharded up/gate projections so the activation and the down
+    projection run replicated, in the single-device order — the
+    constraint that keeps sharded decode bitwise-identical.  The seam
+    sits on the dot outputs, BEFORE the activation: gathering after it
+    lets the partitioner compute the activation on the local shard,
+    whose fused lowering differs from the full-width one by ~1 ulp
+    (measured on CPU; see tests/test_sharded_serve.py)."""
     if gated:
-        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        g = shard_fn("mlp_up", x @ params["w_gate"])
+        u = shard_fn("mlp_up", x @ params["w_up"])
+        h = jax.nn.silu(g) * u
     else:
-        h = jax.nn.gelu(x @ params["w_up"])
+        h = jax.nn.gelu(shard_fn("mlp_up", x @ params["w_up"]))
     return h @ params["w_down"]
 
 

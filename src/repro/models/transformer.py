@@ -156,6 +156,7 @@ def _apply_attn_block(p, x, positions, *, cfg, window, knobs, collect_cache,
         ctx = attn.flash_attention_xla(q, k, v, causal=True, window=window,
                                        q_chunk=knobs.q_chunk,
                                        causal_skip=knobs.causal_skip)
+    ctx = shard_fn("attn_out", ctx)
     x = x + attn.attn_output(p["attn"], ctx)
     h2 = rmsnorm(p["ln2"], x)
     aux = {}
@@ -163,7 +164,7 @@ def _apply_attn_block(p, x, positions, *, cfg, window, knobs, collect_cache,
         out, aux = moe_ffn(p["moe"], h2, cfg.moe, train=not collect_cache,
                            shard_fn=shard_fn)
     elif ffn == "mlp":
-        out = mlp(p["mlp"], h2, cfg.gated_mlp)
+        out = mlp(p["mlp"], h2, cfg.gated_mlp, shard_fn=shard_fn)
     else:
         out = jnp.zeros_like(h2)
     x = x + out
@@ -179,7 +180,7 @@ def _ffn_out(p, h2, ffn, *, cfg, shard_fn):
         out, _ = moe_ffn(p["moe"], h2, cfg.moe, train=False, shard_fn=shard_fn)
         return out
     if ffn == "mlp":
-        return mlp(p["mlp"], h2, cfg.gated_mlp)
+        return mlp(p["mlp"], h2, cfg.gated_mlp, shard_fn=shard_fn)
     return jnp.zeros_like(h2)
 
 
@@ -224,6 +225,7 @@ def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
                                  num_splits=knobs.decode_splits)
         else:
             ctx = attn.decode_attention_xla(q, kc, vc, pos, window=window)
+    ctx = shard_fn("attn_out", ctx)
     x = x + attn.attn_output(p["attn"], ctx)
     h2 = rmsnorm(p["ln2"], x)
     return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), \
@@ -263,6 +265,7 @@ def _apply_attn_block_prefill_chunk(p, x, cache, slot, offset, *, cfg, window,
                                    window=window,
                                    q_chunk=min(knobs.q_chunk, c),
                                    q_offset=offset)
+    ctx = shard_fn("attn_out", ctx)
     x = x + attn.attn_output(p["attn"], ctx)
     h2 = rmsnorm(p["ln2"], x)
     return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), \

@@ -20,9 +20,18 @@ in ``AUTOSCALE_POLICIES``, resolved by ``get_autoscale_policy(name)``:
   trigger 3x harder), so the pool grows for a gold burst before a
   free-tier flood of the same depth would.
 
-Flap damping is the autoscaler's, not the policy's: a direction must
-hold for ``sustain`` consecutive ticks to fire, and after any event the
-role is frozen for ``cooldown`` ticks.  Scale-down is graceful — the
+**Invariant — anti-flap rules** (the autoscaler's, not the policy's;
+a policy only votes a direction, it cannot flap the pool):
+
+1. a direction must hold for ``sustain`` consecutive ticks to fire —
+   any opposing or neutral vote resets the streak;
+2. after any scale event the role is frozen for ``cooldown`` ticks
+   (both directions — a scale-up cannot be "corrected" into an
+   immediate scale-down);
+3. at most one scale event per role per tick, and never past the
+   role's ``min``/``max`` replica bounds.
+
+Scale-down is graceful — the
 adapter's ``begin_scale_down`` drains the victim through the existing
 preemption-checkpoint path (running work migrates, pools empty, THEN
 the replica leaves), and the autoscaler keeps the SCALE_DOWN telemetry

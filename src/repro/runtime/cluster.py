@@ -79,6 +79,11 @@ class ReplicaOffer:
     free_pages: Optional[int]  # None: dense cache (slots only)
     page_size: Optional[int]
     queue_depth: int
+    # sharded paged replicas (ServeConfig.mesh_shape with > 1 data host)
+    # advertise the per-host sub-pool split behind ``free_pages``; None
+    # for dense or unsharded replicas.  Routing policies key on the
+    # aggregate, so sharded and unsharded replicas mix in one pool.
+    free_pages_by_host: Optional[list] = None
 
 
 # ---------------------------------------------------------------- policies

@@ -30,6 +30,15 @@ handoff pipeline between the two halves:
    output stream is **bitwise-identical** to the unified engine's,
    greedy and seeded-sampled alike.
 
+**Invariant — refcount balance across pools**: at every tick boundary,
+each replica's page pool satisfies ``used = sum(refcounts of mapped
+pages)`` *independently*, and a chain in transit is owned by exactly
+one side — the source pool until ``adopt_chain`` returns, the
+destination pool after.  No step of the handoff (extract, transfer,
+resume, chaos sweep, retire-drain) may leave a page referenced by both
+pools or by neither; ``tests/test_disagg.py`` asserts both pools drain
+to zero held pages after every run, chaos included.
+
 **Backpressure**: a handoff with no fitting destination stays queued
 (``handoff_backpressure`` counts the deferrals); ``run()`` counts
 in-transit handoffs as in-flight work so the loop never exits

@@ -121,15 +121,33 @@ class PagePool:
     (never allocated, refcount pinned).  Banks stripe the pool into
     ``num_banks`` contiguous regions — the model of HBM channels the
     placement policies optimize over.
+
+    ``num_hosts > 1`` (sharded serving) additionally partitions the pool
+    into equal contiguous *host sub-pools*: the device-side page pools
+    are sharded over the mesh's "data" axis, so pages
+    ``[h * num_pages/H, (h+1) * num_pages/H)`` physically live on host
+    (data row) ``h``.  ``alloc(host=h)`` then draws only from that
+    host's banks, keeping a slot's whole page chain host-local — decode
+    for the slot never gathers KV across hosts.  The null page sits in
+    host 0's range (host 0 has one page less of capacity).
     """
 
     def __init__(self, num_pages: int, page_size: int, *,
-                 policy: str | PagePolicy = "pack", num_banks: int = 8):
+                 policy: str | PagePolicy = "pack", num_banks: int = 8,
+                 num_hosts: int = 1):
         assert num_pages >= 2, "need at least the null page + one real page"
         assert page_size >= 1
+        assert num_hosts >= 1
+        if num_hosts > 1 and num_pages % num_hosts:
+            raise ValueError(
+                f"num_pages {num_pages} not divisible by num_hosts "
+                f"{num_hosts} (host sub-pools must align with the device "
+                f"shard of the page dim)")
         self.num_pages = num_pages
         self.page_size = page_size
         self.num_banks = max(1, min(num_banks, num_pages - 1))
+        self.num_hosts = num_hosts
+        self._per_host = num_pages // num_hosts
         self.policy = (policy if isinstance(policy, PagePolicy)
                        else get_page_policy(policy))
         self._per_bank = -(-num_pages // self.num_banks)
@@ -145,6 +163,9 @@ class PagePool:
     def bank_of(self, page: int) -> int:
         return page // self._per_bank
 
+    def host_of(self, page: int) -> int:
+        return page // self._per_host
+
     @property
     def available(self) -> int:
         return sum(len(v) for v in self._free_by_bank.values())
@@ -157,15 +178,45 @@ class PagePool:
     def in_use(self) -> int:
         return self.capacity - self.available
 
-    def alloc(self, n: int = 1) -> list[int]:
-        """Take ``n`` pages (refcount 1 each) per the placement policy."""
+    def free_by_host(self) -> list[int]:
+        """Free-page count per host sub-pool (length ``num_hosts``) —
+        what a sharded engine's ``offer()`` advertises."""
+        counts = [0] * self.num_hosts
+        for pages in self._free_by_bank.values():
+            for p in pages:
+                counts[self.host_of(p)] += 1
+        return counts
+
+    def free_in_host(self, host: int) -> int:
+        return self.free_by_host()[host]
+
+    def alloc(self, n: int = 1, *, host: Optional[int] = None) -> list[int]:
+        """Take ``n`` pages (refcount 1 each) per the placement policy.
+
+        ``host`` restricts the draw to one host sub-pool; ``None`` with
+        ``num_hosts > 1`` picks the sub-pool with the most free pages
+        (deterministic: lowest index on ties), so unconstrained chains —
+        disagg adoptions, for instance — still stay host-local."""
         if n <= 0:
             return []
-        if self.available < n:
-            raise PoolExhausted(
-                f"need {n} pages, {self.available} free of {self.capacity}")
-        pages = self.policy.select(self._free_by_bank, self._in_use_by_bank,
-                                   n)
+        if self.num_hosts > 1 and host is None:
+            by_host = self.free_by_host()
+            host = max(range(self.num_hosts), key=lambda h: (by_host[h], -h))
+        if host is not None and self.num_hosts > 1:
+            free = {b: [p for p in pages if self.host_of(p) == host]
+                    for b, pages in self._free_by_bank.items()}
+            free = {b: pages for b, pages in free.items() if pages}
+            if sum(len(v) for v in free.values()) < n:
+                raise PoolExhausted(
+                    f"need {n} pages on host {host}, "
+                    f"{self.free_in_host(host)} free of {self._per_host}")
+        else:
+            free = self._free_by_bank
+            if self.available < n:
+                raise PoolExhausted(
+                    f"need {n} pages, {self.available} free of "
+                    f"{self.capacity}")
+        pages = self.policy.select(free, self._in_use_by_bank, n)
         assert len(pages) == n, (len(pages), n)
         for p in pages:
             self._free_by_bank[self.bank_of(p)].remove(p)
@@ -236,14 +287,17 @@ class PrefixCache:
             pages.append(page)
         return pages
 
-    def evictable(self, exclude=()) -> int:
+    def evictable(self, exclude=(), host: Optional[int] = None) -> int:
         """Pages ``evict`` could free right now (cache-only, ref 1).
         ``exclude`` lists pages the prospective admission would itself
         use: its ``lookup`` increfs them *before* ``evict`` runs, so
-        they must not be counted as reclaimable headroom."""
+        they must not be counted as reclaimable headroom.  ``host``
+        counts only one host sub-pool (sharded serving: eviction there
+        frees pages only that host's allocations can reuse)."""
         skip = set(exclude)
         return sum(1 for pg in self._map.values()
-                   if self.pool.ref[pg] == 1 and pg not in skip)
+                   if self.pool.ref[pg] == 1 and pg not in skip
+                   and (host is None or self.pool.host_of(pg) == host))
 
     def lookup(self, prompt: np.ndarray) -> tuple[list[int], int]:
         """Longest cached prefix of ``prompt`` in whole pages.
@@ -280,15 +334,17 @@ class PrefixCache:
                 self.pool.incref(blocks[i])
             parent = key
 
-    def evict(self, n_pages: int) -> int:
+    def evict(self, n_pages: int, host: Optional[int] = None) -> int:
         """Drop up to ``n_pages`` cache-only entries (page refcount 1),
-        oldest first.  Returns the number of pages actually freed."""
+        oldest first; ``host`` restricts to one host sub-pool.  Returns
+        the number of pages actually freed."""
         freed = 0
         for key in list(self._map):
             if freed >= n_pages:
                 break
             page = self._map[key]
-            if self.pool.ref[page] == 1:  # only the cache holds it
+            if self.pool.ref[page] == 1 and (
+                    host is None or self.pool.host_of(page) == host):
                 del self._map[key]
                 self.pool.decref(page)
                 freed += 1
@@ -314,26 +370,51 @@ class KVCacheManager:
     physical page ``page_table[s, i]`` (0 = null page for unmapped
     blocks).  One table serves every layer — layer pools are stacked, so
     a (page, offset) write lands at the same coordinates in each.
+
+    ``num_hosts > 1`` (sharded serving): the device page pools are
+    sharded over the mesh's "data" axis, so the manager partitions
+    slots and pages alike — slot ``s`` belongs to host
+    ``s * num_hosts // slots`` (the contiguous-block shard of the slot
+    dim) and its admissions allocate only from that host's page
+    sub-pool, keeping every chain's KV on the host that computes the
+    slot's queries.  Prefix-cache chains are shared only within a host
+    for the same reason.  Locality is a *placement* property — resumed
+    or adopted chains from another host still decode correctly, just
+    with cross-host gathers.
     """
 
     def __init__(self, *, slots: int, max_len: int, page_size: int,
                  num_pages: int, policy: str | PagePolicy = "pack",
                  prefix_cache: bool = True, num_banks: int = 8,
-                 chunk: int = 0):
+                 chunk: int = 0, num_hosts: int = 1):
         assert max_len % page_size == 0, (max_len, page_size)
         self.page_size = page_size
         self.max_pages = max_len // page_size
         self.max_len = max_len
+        self.slots = slots
+        self.num_hosts = num_hosts
         self.chunk = chunk or page_size  # engine's prefill-chunk grid
         assert self.chunk % page_size == 0, (self.chunk, page_size)
         self.pool = PagePool(num_pages, page_size, policy=policy,
-                             num_banks=num_banks)
+                             num_banks=num_banks, num_hosts=num_hosts)
         self.prefix = PrefixCache(self.pool) if prefix_cache else None
         self.page_table = np.zeros((slots, self.max_pages), np.int32)
         self._held: list[list[int]] = [[] for _ in range(slots)]
         # metrics: a private registry by default; the owning engine
         # rebinds onto the shared one (ServeEngine.bind_telemetry)
         self.bind_metrics(None, 0)
+
+    def slot_host(self, slot: int) -> Optional[int]:
+        """Host (mesh "data" row) that computes ``slot``'s queries —
+        the contiguous-block partition jax uses for the sharded slot
+        dim.  None when unsharded (num_hosts == 1)."""
+        if self.num_hosts == 1:
+            return None
+        return slot * self.num_hosts // self.slots
+
+    def free_by_host(self) -> list[int]:
+        """Per-host free-page counts (``offer()`` advertises these)."""
+        return self.pool.free_by_host()
 
     def bind_metrics(self, registry, replica: int) -> None:
         """Register the pool's series on ``registry`` (private
@@ -387,18 +468,35 @@ class KVCacheManager:
         (tests/test_preemption.py holds them equal)."""
         return self._sizing(prompt, max_new)[0]
 
-    def fits_now(self, prompt: np.ndarray, max_new: int) -> bool:
+    def fits_now(self, prompt: np.ndarray, max_new: int,
+                 slot: Optional[int] = None) -> bool:
         """Could ``admit`` succeed right now?  The scheduler's
         preemption phase gates swaps on this (an accurate estimate —
         over-estimating demand would suppress justified evictions).
         Evictable prefix-cache pages count as available (``admit``
         evicts them itself) — except the request's own cached prefix,
-        which its lookup increfs before eviction runs."""
+        which its lookup increfs before eviction runs.
+
+        Sharded (num_hosts > 1): the answer is per host sub-pool —
+        ``slot`` pins the host; without a slot the *best* host is
+        assumed (a router-facing estimate; the admit of a specific
+        slot on a fuller host can still backpressure)."""
         need, cached = self._sizing(prompt, max_new)
-        avail = self.pool.available
-        if self.prefix is not None:
-            avail += self.prefix.evictable(exclude=cached)
-        return need <= avail
+        if self.num_hosts == 1:
+            avail = self.pool.available
+            if self.prefix is not None:
+                avail += self.prefix.evictable(exclude=cached)
+            return need <= avail
+        hosts = ([self.slot_host(slot)] if slot is not None
+                 else range(self.num_hosts))
+        by_host = self.pool.free_by_host()
+        for h in hosts:
+            avail = by_host[h]
+            if self.prefix is not None:
+                avail += self.prefix.evictable(exclude=cached, host=h)
+            if need <= avail:
+                return True
+        return False
 
     def fits_ever(self, prompt_len: int, max_new: int) -> bool:
         """Could this request EVER be admitted (empty pool)?"""
@@ -423,8 +521,15 @@ class KVCacheManager:
         seed decode.  Every shared page the rewrite touches is CoW'd —
         the rewrite produces the same K/V, but the shared page must not
         see even an identical write while other slots read it.
+
+        Sharded (num_hosts > 1): every fresh page comes from the slot's
+        own host sub-pool, and a cached prefix chain is reused only when
+        it lives on that host (otherwise it is released and re-run —
+        correctness would survive a cross-host chain, locality would
+        not).
         """
         assert not self._held[slot], f"slot {slot} already holds pages"
+        host = self.slot_host(slot)
         prompt = np.asarray(prompt, np.int32)
         p = len(prompt)
         ps = self.page_size
@@ -435,17 +540,26 @@ class KVCacheManager:
         matched = 0
         if self.prefix is not None:
             cached, matched = self.prefix.lookup(prompt)
+            if host is not None and any(self.pool.host_of(pg) != host
+                                        for pg in cached):
+                for pg in cached:  # wrong host: treat as a miss
+                    self.pool.decref(pg)
+                cached, matched = [], 0
         start = (min(matched, p - 1) // chunk) * chunk
         first_write_block = start // ps
         cow_blocks = list(range(first_write_block, len(cached)))
         need_new = n_blocks - len(cached) + len(cow_blocks)
-        if self.pool.available < need_new and self.prefix is not None:
-            self.prefix.evict(need_new - self.pool.available)
-        if self.pool.available < need_new:
+        free = (self.pool.available if host is None
+                else self.pool.free_in_host(host))
+        if free < need_new and self.prefix is not None:
+            self.prefix.evict(need_new - free, host=host)
+            free = (self.pool.available if host is None
+                    else self.pool.free_in_host(host))
+        if free < need_new:
             for pg in cached:  # roll back lookup refs; stay queued
                 self.pool.decref(pg)
             return None
-        fresh = self.pool.alloc(need_new)
+        fresh = self.pool.alloc(need_new, host=host)
         blocks = list(cached)
         cow = []
         for blk in cow_blocks:
@@ -508,11 +622,20 @@ class KVCacheManager:
     # ------------------------------------------------- cross-engine transfer
     def can_adopt(self, n: int) -> bool:
         """Could ``adopt_chain(n)`` succeed right now?  Evictable
-        prefix-cache pages count — ``adopt_chain`` evicts them itself."""
-        avail = self.pool.available
-        if self.prefix is not None:
-            avail += self.prefix.evictable()
-        return n <= avail and n <= self.max_pages
+        prefix-cache pages count — ``adopt_chain`` evicts them itself.
+        Sharded: the chain must fit one host sub-pool (chains stay
+        host-local), so the best host decides."""
+        if n > self.max_pages:
+            return False
+        if self.num_hosts == 1:
+            avail = self.pool.available
+            if self.prefix is not None:
+                avail += self.prefix.evictable()
+            return n <= avail
+        by_host = self.pool.free_by_host()
+        return any(n <= by_host[h] + (0 if self.prefix is None else
+                                      self.prefix.evictable(host=h))
+                   for h in range(self.num_hosts))
 
     def adopt_chain(self, n: int) -> Optional[list[int]]:
         """Allocate ``n`` fresh pages in THIS pool to receive a page
@@ -521,14 +644,23 @@ class KVCacheManager:
         handoff stays queued).  The caller copies the K/V bytes across
         (``copy_cache_pages_across``) and then calls the source pool's
         ``release_chain`` on the old pages, keeping both pools
-        refcount-balanced."""
+        refcount-balanced.  Sharded: the adopted chain lands whole on
+        the emptiest host sub-pool (``PagePool.alloc(host=None)``)."""
         if n > self.max_pages:
             return None
-        if self.pool.available < n and self.prefix is not None:
-            self.prefix.evict(n - self.pool.available)
-        if self.pool.available < n:
+        if self.num_hosts == 1:
+            if self.pool.available < n and self.prefix is not None:
+                self.prefix.evict(n - self.pool.available)
+            if self.pool.available < n:
+                return None
+            return self.pool.alloc(n)
+        by_host = self.pool.free_by_host()
+        best = max(range(self.num_hosts), key=lambda h: (by_host[h], -h))
+        if by_host[best] < n and self.prefix is not None:
+            self.prefix.evict(n - by_host[best], host=best)
+        if self.pool.free_in_host(best) < n:
             return None
-        return self.pool.alloc(n)
+        return self.pool.alloc(n, host=best)
 
     def release_chain(self, pages: list[int]) -> None:
         """Drop a detached chain's hold on THIS pool — the source half of

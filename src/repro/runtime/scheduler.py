@@ -392,6 +392,12 @@ class Scheduler:
                              if getattr(r, "_preempted", False)), None)
                 if held is None or not self._admit_into(s, plan, view,
                                                         req=held):
+                    if (self.kv is not None
+                            and getattr(self.kv, "num_hosts", 1) > 1):
+                        # sharded pool: slot s's HOST sub-pool is full,
+                        # not the whole pool — a later free slot mapping
+                        # to another host may still admit the choice
+                        continue
                     return plan  # retry after slots drain
         if self.preempt:
             self._decide_preemptions(plan, view)

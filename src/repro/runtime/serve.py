@@ -308,6 +308,14 @@ class ServeConfig:
     # run chunked prefill and surrender the finished slot to a handoff;
     # "decode" engines only accept handed-off (checkpointed) requests
     role: str = "unified"
+    # device mesh for ONE sharded replica, e.g. (2, 4) = 2 data hosts x
+    # TP 4 (see launch/mesh.py make_serve_mesh): the "model" axis carries
+    # gather-form tensor parallelism through the layer stack, the leading
+    # data axes shard the decode slots and split the KV page pool into
+    # per-host sub-pools.  None (default): single-device engine.  The
+    # sharded engine's token streams are bitwise-identical to the
+    # unsharded one (docs/serving.md, tests/test_sharded_serve.py).
+    mesh_shape: Optional[tuple] = None
 
 
 _CONFIG_FIELDS = {f.name for f in dataclasses.fields(ServeConfig)}
@@ -366,6 +374,42 @@ class ServeEngine:
             if config.draft_k + 1 >= config.max_len:
                 raise ValueError(f"draft_k {config.draft_k} too deep for "
                                  f"max_len {config.max_len}")
+        # ---- device mesh: shard this replica without changing its output
+        self._batch_sharding = None
+        self._num_hosts = 1
+        if mesh is None and config.mesh_shape is not None:
+            from repro.launch.mesh import make_serve_mesh
+            mesh = make_serve_mesh(config.mesh_shape)
+        if mesh is not None:
+            if config.mode != "continuous":
+                raise ValueError("sharded serving (mesh / mesh_shape) "
+                                 "requires mode='continuous'")
+            if model.knobs.use_pallas:
+                raise ValueError(
+                    "sharded serving requires the XLA path "
+                    "(RuntimeKnobs.use_pallas=False): the Pallas decode "
+                    "kernels are single-device and do not partition")
+            from repro.sharding import (ServeShardFn, serve_batch_sharding,
+                                        serve_cache_shardings,
+                                        serve_param_shardings)
+            # rebuild the model with the gather-form TP seams threaded
+            # through the layer stack; ServeShardFn hashes on the mesh,
+            # so engines over the same mesh still share compiled steps
+            model = type(model)(model.cfg,
+                                model.knobs.with_(
+                                    shard_fn=ServeShardFn(mesh)))
+            params = jax.device_put(
+                params, serve_param_shardings(mesh, model.cfg, params))
+            self._batch_sharding = serve_batch_sharding(
+                mesh, config.batch_slots)
+            if self._batch_sharding is not None:
+                # slot dim sharded over the data axes -> each host row
+                # decodes a contiguous block of slots; the KV page pool
+                # splits into per-host sub-pools so a slot's page chain
+                # stays on the host that computes its queries
+                self._num_hosts = 1
+                for ax in ("pod", "data"):
+                    self._num_hosts *= dict(mesh.shape).get(ax, 1)
         self.config = config
         self.model = model
         self.params = params
@@ -418,10 +462,17 @@ class ServeEngine:
             num_pages = config.num_pages
             if num_pages is None:
                 num_pages = batch_slots * (max_len // page_size) + 1
+            if self._num_hosts > 1:
+                # host sub-pools must tile the pool evenly (the device
+                # page dim shards over the data axes): round capacity UP
+                # so a caller-sized pool never silently shrinks
+                num_pages = -(-num_pages // self._num_hosts) \
+                    * self._num_hosts
             self.kv = KVCacheManager(
                 slots=batch_slots, max_len=max_len, page_size=page_size,
                 num_pages=num_pages, policy=config.page_policy,
-                prefix_cache=config.prefix_cache, chunk=c)
+                prefix_cache=config.prefix_cache, chunk=c,
+                num_hosts=self._num_hosts)
             self.caches = model.init_cache_paged(num_pages, page_size)
             # greedy and sampled variants both exist (jit is lazy — only
             # the ones a trace actually hits compile); a tick pays the
@@ -473,6 +524,13 @@ class ServeEngine:
             self.spec_accepted = 0
             self.spec_emitted = 0
             self.spec_ticks = 0
+        if mesh is not None and cache_shardings is None:
+            # default layout: KV-head dim over "model" (each TP shard
+            # attends its own heads), slot/page dim over the data axes
+            # (serve_cache_shardings — NOT the training cache rules,
+            # which shard the sequence dim and would psum softmax stats)
+            cache_shardings = serve_cache_shardings(
+                mesh, self.caches, paged=(config.cache == "paged"))
         if cache_shardings is not None:
             self.caches = jax.device_put(self.caches, cache_shardings)
         # decide/execute split: the scheduler owns the queue, the policy,
@@ -884,6 +942,17 @@ class ServeEngine:
         self._tick_telemetry(emitted)
         return emitted
 
+    def _put_b(self, x):
+        """Slot-dim host array -> device.  Sharded engines place it over
+        the mesh's data axes (the layout the compiled step expects for
+        the slot dim); unsharded engines just convert.  The page table
+        deliberately does NOT come through here — every host gathers
+        pages, so it stays replicated."""
+        a = jnp.asarray(x)
+        if self._batch_sharding is not None:
+            a = jax.device_put(a, self._batch_sharding)
+        return a
+
     def _step_for_splits(self, splits: int, sampled: bool):
         """Dense decode step with a given split-K fan-out (fan-outs from
         the small set the heuristic emits: 1, 2, 4, 8).  Resolution goes
@@ -917,17 +986,17 @@ class ServeEngine:
         ticks where no slot proposed a draft — the T-wide verify step
         would pay ~T x attention/unembed work to emit the same one
         token per slot)."""
-        pos = jnp.asarray(self.pos)
+        pos = self._put_b(self.pos)
         # pay the sampling math only when a live slot actually samples
         # (finished slots reset their temp to 0)
         sampling = bool(self.samp_temp.max() > 0)
         samp = (() if not sampling else
-                (jnp.asarray(self.samp_temp), jnp.asarray(self.samp_topk),
-                 jnp.asarray(self.samp_topp), jnp.asarray(self.samp_keys)))
+                (self._put_b(self.samp_temp), self._put_b(self.samp_topk),
+                 self._put_b(self.samp_topp), self._put_b(self.samp_keys)))
         if self.kv is not None:
             step = self._step_sampled if sampling else self._step
             nxt_dev, self.caches = step(
-                self.params, self.caches, jnp.asarray(self.tokens), pos,
+                self.params, self.caches, self._put_b(self.tokens), pos,
                 jnp.asarray(self.kv.page_table), *samp)
         else:
             step = self._step_sampled if sampling else self._step
@@ -936,7 +1005,7 @@ class ServeEngine:
                     int(self.pos.max()), live, max_len=self.max_len),
                     sampling)
             nxt_dev, self.caches = step(self.params, self.caches,
-                                        jnp.asarray(self.tokens), pos,
+                                        self._put_b(self.tokens), pos,
                                         *samp)
         nxt = np.asarray(nxt_dev)
         for s, req in enumerate(self.active):
@@ -1025,16 +1094,16 @@ class ServeEngine:
                 draft_len[s] = len(d)
         if not draft_len.any():
             return self._decode_tick_plain(emitted, live)
-        pos = jnp.asarray(self.pos)
+        pos = self._put_b(self.pos)
         sampling = bool(self.samp_temp.max() > 0)
         samp = (() if not sampling else
-                (jnp.asarray(self.samp_temp), jnp.asarray(self.samp_topk),
-                 jnp.asarray(self.samp_topp), jnp.asarray(self.samp_keys)))
+                (self._put_b(self.samp_temp), self._put_b(self.samp_topk),
+                 self._put_b(self.samp_topp), self._put_b(self.samp_keys)))
         step = self._spec_step_sampled if sampling else self._spec_step
         extra = (() if self.kv is None
                  else (jnp.asarray(self.kv.page_table),))
         target_dev, self.caches = step(self.params, self.caches,
-                                       jnp.asarray(feed), pos, *extra, *samp)
+                                       self._put_b(feed), pos, *extra, *samp)
         target = np.asarray(target_dev)  # (B, T) per-row verified tokens
         self.spec_ticks += 1
         for s, req in enumerate(self.active):
@@ -1140,14 +1209,24 @@ class ServeEngine:
         """Resource offer for a cluster router (the Mesos ``advertise``
         analogue, per engine replica): free decode slots, free KV pages
         (``None`` for the dense cache — slots are the only currency),
-        and the backlog depth a placement would queue behind."""
-        return {
+        and the backlog depth a placement would queue behind.
+
+        Sharded paged engines (``mesh_shape`` with > 1 data host)
+        additionally advertise ``free_pages_by_host`` — the per-host
+        sub-pool balance.  The aggregate ``free_pages`` stays in the
+        offer unchanged, so unsharded routers compose as before; a
+        host-aware router can see that 40 free pages split 40/0 admit
+        less than 20/20."""
+        out = {
             "free_slots": self.free_slots(),
             "free_pages": (None if self.kv is None
                            else self.kv.pool.available),
             "page_size": None if self.kv is None else self.kv.page_size,
             "queue_depth": len(self.scheduler.queue),
         }
+        if self.kv is not None and self.kv.num_hosts > 1:
+            out["free_pages_by_host"] = self.kv.free_by_host()
+        return out
 
     def live_requests(self) -> list:
         """Every unfinished request this engine holds — running slots

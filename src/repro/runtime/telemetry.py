@@ -25,10 +25,18 @@ This module gives the stack one spine, in three layers:
     straggler route-around, brown-out).  ``pid`` is the replica id
     (router events use ``ROUTER_PID``), ``tid`` the request id, so
     Perfetto renders one track per replica and one row per request.
-    Open spans are tracked per ``(pid, tid)``; ``end_all(pid)`` closes a
-    fenced replica's spans so chaos never leaks an orphan span.  An
-    optional ``limit`` turns the event store into a bounded ring buffer
-    (``dropped`` counts evictions).
+    **Invariant — span pairing**: every ``begin_span`` is closed by
+    exactly one matching ``end_span`` on the same ``(pid, tid)`` track,
+    in LIFO order within the track; open spans are tracked per
+    ``(pid, tid)`` and ``end_all(pid)`` closes a fenced replica's spans
+    so chaos never leaks an orphan.  ``validate_chrome_trace`` reports
+    any ``(pid, tid)`` stack still holding an open begin, and the
+    ``python -m repro.runtime.telemetry`` CLI fails on them (unless
+    ``--allow-unbalanced``, for partial dumps) — an emitted trace that
+    fails it is a bug in the emitter.  An optional ``limit``
+    turns the event store into a bounded ring buffer (``dropped``
+    counts evictions; span balance is only guaranteed for spans whose
+    begin survived the ring).
 
 ``Telemetry``
     The facade the engine/router/launcher bind to: always carries a

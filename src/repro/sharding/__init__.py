@@ -1,7 +1,11 @@
 from .pipeline import make_pipelined_forward, pipeline_apply
-from .rules import (batch_shardings, cache_shardings, grad_shardings,
-                    make_shard_fn, opt_state_shardings, param_shardings)
+from .rules import (ServeShardFn, batch_shardings, cache_shardings,
+                    grad_shardings, make_shard_fn, opt_state_shardings,
+                    param_shardings, serve_batch_sharding,
+                    serve_cache_shardings, serve_param_shardings)
 
 __all__ = ["param_shardings", "batch_shardings", "cache_shardings",
            "opt_state_shardings", "grad_shardings", "make_shard_fn",
+           "serve_param_shardings", "serve_cache_shardings",
+           "serve_batch_sharding", "ServeShardFn",
            "pipeline_apply", "make_pipelined_forward"]

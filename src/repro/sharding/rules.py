@@ -191,6 +191,165 @@ def _all_axes(mesh: Mesh):
     return axes if len(axes) > 1 else axes[0]
 
 
+# ------------------------------------------------- serving (gather-form TP)
+# Training TP (above) lets GSPMD split contraction dims and psum the
+# partials — fastest, but the partial-sum order differs from the
+# single-device reduction, so results drift by ~1 ulp per matmul.  Serving
+# promises BITWISE-identical output on any mesh (tests pin it), so the
+# serving layout uses *gather-form* tensor parallelism instead: every
+# matmul whose contraction dim would be sharded keeps that operand
+# replicated, and the activation feeding it is all-gathered first (the
+# ``attn_out`` / ``mlp_up`` / ``moe_expert_out`` shard_fn seams in
+# models/).  What IS sharded: the QKV projections and per-head attention
+# over the KV cache (heads are embarrassingly parallel), the MLP up/gate
+# projections (ff columns independent), per-expert MoE matmuls (expert is
+# a batch dim), and the slot/batch dim over "data".  Reductions — ``wo``,
+# ``w_down``, the MoE combine, rmsnorm, unembed — run replicated in the
+# exact single-device order.  More all-gather traffic than psum TP; the
+# memory- and FLOP-heavy half (attention reads over the KV cache, up
+# projections) still scales with the mesh.
+
+
+def _serve_trailing_spec(pstr: str, key: str, shape, mesh) -> P:
+    def c(*cands):
+        return _choose(mesh, shape, *cands)
+
+    if key == "wq":  # (dm, H, hd): shard heads
+        return c((None, "model", None), (None, None, None))
+    if key in ("wk", "wv"):  # (dm, KV, hd)
+        return c((None, "model", None), (None, None, None))
+    if key in ("bq", "bk", "bv"):  # (H|KV, hd)
+        return c(("model", None), (None, None))
+    if "moe" in pstr and key in ("w_gate", "w_up", "w_down"):
+        # (E, dm, dff) / (E, dff, dm): expert is a batch dim — per-expert
+        # matmuls are independent, so sharding E is reduction-free
+        return c(("model", None, None), (None, None, None))
+    if key in ("w_gate", "w_up"):  # mlp (dm, ff): columns independent
+        return c((None, "model"), (None, None))
+    # wo, w_down, router, embed table/head, norms, ssm leaves: replicated —
+    # these feed (or are) the contractions that must keep reduction order
+    return P(*([None] * len(shape)))
+
+
+def serve_param_shardings(mesh: Mesh, cfg, param_specs):
+    """Gather-form TP parameter layout for the serving engine (bitwise-
+    preserving; see the block comment above)."""
+    def spec(path, leaf):
+        pstr = _path_str(path)
+        key = pstr.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        if "moe" in pstr and key in ("w_gate", "w_up", "w_down"):
+            rank = 3
+        else:
+            rank = _SEMANTIC_RANK.get(key, len(shape))
+        lead = len(shape) - rank  # stacked layer dims, never sharded
+        tail = _serve_trailing_spec(pstr, key, shape[lead:], mesh)
+        return NamedSharding(mesh, P(*([None] * lead + list(tail))))
+
+    return jax.tree_util.tree_map_with_path(spec, param_specs)
+
+
+def serve_cache_shardings(mesh: Mesh, cache_specs, *, paged: bool = False):
+    """Serving-cache layout: slots (dense) or pages (paged) over "data",
+    KV heads over "model"; never the sequence dim (sequence-sharded
+    attention psums softmax stats, breaking bitwise identity).
+
+    Dense attn leaves are (L..., B, S, KV, hd): B -> "data", KV ->
+    "model".  Paged pool leaves are (L..., P, page_size, KV, hd): the
+    page dim P -> "data" — each data row physically holds one host's
+    page sub-pool, which ``runtime/kv_pool.py``'s host-local placement
+    keeps slot chains inside — and KV -> "model".  SSM state/conv
+    leaves shard the batch dim only (their out-projections have no
+    gather seam)."""
+    dp = _dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        pstr = _path_str(path)
+        key = pstr.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        if key in ("k", "v"):
+            lead = len(shape) - 4  # (B|P, S|page_size, KV, hd)
+            base = [None] * lead
+            cands = []
+            if dp:
+                cands.append(tuple(base) + (dp, None, "model", None))
+                cands.append(tuple(base) + (dp, None, None, None))
+            cands.append(tuple(base) + (None, None, "model", None))
+            cands.append((None,) * len(shape))
+            return _choose(mesh, shape, *cands)
+        if key in ("state", "conv") and dp:
+            lead = len(shape) - (4 if key == "state" else 3)
+            spec = [None] * len(shape)
+            spec[lead] = dp
+            return _choose(mesh, shape, tuple(spec),
+                           (None,) * len(shape))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec_for(p, l)), cache_specs)
+
+
+class ServeShardFn:
+    """Activation-constraint hook for the gather-form serving layout,
+    passed via ``RuntimeKnobs.shard_fn``.
+
+    Sharding seams ("attn_q"/"attn_kv", "moe_expert_in") pin the
+    parallel phases to the "model" axis; gather seams ("attn_out",
+    "mlp_up", "moe_expert_out", "hidden") force the activation back
+    to model-replicated immediately before a contraction over the
+    sharded dim, so the contraction runs in single-device reduction
+    order on every shard — the constraint that makes sharded decode
+    bitwise-identical to the unsharded engine.
+
+    Hashable on the mesh so ``RuntimeKnobs`` equality (and with it the
+    ``runtime/steps.py`` compiled-step LRU) dedupes engines sharing one
+    mesh."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self._dp = _dp_axes(mesh)
+
+    def __eq__(self, other):
+        return isinstance(other, ServeShardFn) and self.mesh == other.mesh
+
+    def __hash__(self):
+        return hash((type(self).__name__, self.mesh))
+
+    def __call__(self, name: str, x):
+        mesh, dp = self.mesh, self._dp
+        shape = x.shape
+        if name in ("attn_q", "attn_kv") and len(shape) == 4:
+            spec = _choose(mesh, shape, (dp, None, "model", None),
+                           (dp, None, None, None), (None,) * 4)
+        elif name == "attn_out" and len(shape) == 4:  # gather heads
+            spec = _choose(mesh, shape, (dp, None, None, None),
+                           (None,) * 4)
+        elif name == "mlp_up" and len(shape) == 3:  # gather ff pre-activation
+            spec = _choose(mesh, shape, (dp, None, None), (None,) * 3)
+        elif name == "hidden" and len(shape) == 3:
+            spec = _choose(mesh, shape, (dp, None, None), (None,) * 3)
+        elif name == "moe_expert_in" and len(shape) == 5:  # shard experts
+            spec = _choose(mesh, shape, (dp, None, "model", None, None),
+                           (None, None, "model", None, None), (None,) * 5)
+        elif name == "moe_expert_out" and len(shape) == 5:  # gather experts
+            spec = _choose(mesh, shape, (dp, None, None, None, None),
+                           (None,) * 5)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+
+def serve_batch_sharding(mesh: Mesh, batch: int) -> Optional[NamedSharding]:
+    """Sharding for the engine's per-slot host arrays (tokens, pos,
+    sampling params): slot dim over "data" when divisible, else None
+    (replicate — jit's default placement)."""
+    dp = _dp_axes(mesh)
+    if dp is None or batch % _axis_size(mesh, dp) != 0:
+        return None
+    return NamedSharding(mesh, P(dp))
+
+
 # ------------------------------------------------------- batch/cache rules
 def batch_shardings(mesh: Mesh, specs, layout: str = "tp"):
     """Inputs: shard the batch dim over (pod, data) when divisible; under
