@@ -56,23 +56,32 @@ PAGE_SIZE = 16
 DRAFT_K = 3
 
 
-def _model(max_len):
+def _model(max_len, **knob_over):
     cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
                               num_layers=2, vocab_size=64)
-    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32))
+    model = LM(cfg, RuntimeKnobs(cache_dtype=jnp.float32, **knob_over))
     return model, model.init(jax.random.PRNGKey(0))
 
 
-def _measure(fn, params, caches, args, iters):
+def _measure(fn, params, caches, args, iters, thread_last=False):
     """Best-of-iters per-call wall time.  The step donates its caches,
     so each call chains the previous call's output caches back in —
-    decode-in-place, exactly as the engine drives it."""
-    out, caches = fn(params, caches, *args)  # warmup + donate the init
+    decode-in-place, exactly as the engine drives it.  ``thread_last``
+    (the buffered prefill step) additionally chains the gather buffer:
+    the step's third output replaces the last positional arg."""
+    def call(caches, args):
+        res = fn(params, caches, *args)
+        if thread_last:
+            out, caches, buf = res
+            return out, caches, args[:-1] + (buf,)
+        out, caches = res
+        return out, caches, args
+    out, caches, args = call(caches, args)  # warmup + donate the init
     jax.block_until_ready(out)
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
-        out, caches = fn(params, caches, *args)
+        out, caches, args = call(caches, args)
         jax.block_until_ready(out)
         best = min(best, time.perf_counter() - t0)
     return best, caches
@@ -86,21 +95,33 @@ def _kernel_case(model, params, kind, *, max_len, iters):
     pos_val = max_len // 2
     pos = jnp.asarray(np.full(B, pos_val, np.int32))
     rng = np.random.default_rng(0)
+    max_pages = max_len // PAGE_SIZE
+    # every slot fully mapped onto distinct pages (page 0 = null)
+    table = (1 + np.arange(B * max_pages, dtype=np.int32)
+             .reshape(B, max_pages))
+    thread_last = False
     if kind == "serve":
         caches = model.init_cache(B, max_len)
         step = compiled_step(model, "serve")
         args = (jnp.asarray(rng.integers(1, 64, (B, 1)).astype(np.int32)),
                 pos)
     elif kind == "paged_serve":
-        max_pages = max_len // PAGE_SIZE
         num_pages = B * max_pages + 1  # + the null page
         caches = model.init_cache_paged(num_pages, PAGE_SIZE)
         step = compiled_step(model, "paged_serve", page_size=PAGE_SIZE)
-        # every slot fully mapped onto distinct pages (page 0 = null)
-        table = (1 + np.arange(B * max_pages, dtype=np.int32)
-                 .reshape(B, max_pages))
         args = (jnp.asarray(rng.integers(1, 64, (B, 1)).astype(np.int32)),
                 pos, jnp.asarray(table))
+    elif kind == "paged_prefill_chunk_buf":
+        # one slot's mid-prompt chunk through the buffered XLA prefill:
+        # the page-table read path plus the dense slot-view insert
+        num_pages = B * max_pages + 1
+        caches = model.init_cache_paged(num_pages, PAGE_SIZE)
+        buf = model.init_cache(1, max_len)
+        step = compiled_step(model, kind, page_size=PAGE_SIZE)
+        chunk = rng.integers(1, 64, (1, PAGE_SIZE)).astype(np.int32)
+        args = (jnp.asarray(chunk), jnp.int32(0), jnp.int32(pos_val),
+                jnp.asarray(table), buf)
+        thread_last = True
     elif kind == "spec_serve":
         caches = model.init_cache(B, max_len)
         step = compiled_step(model, "spec_serve", draft_len=DRAFT_K)
@@ -110,7 +131,8 @@ def _kernel_case(model, params, kind, *, max_len, iters):
         raise ValueError(kind)
     hlo = step.lower(params, caches, *args).compile().as_text()
     analysis = analyze_hlo(hlo)
-    measured_s, caches = _measure(step, params, caches, args, iters)
+    measured_s, caches = _measure(step, params, caches, args, iters,
+                                  thread_last=thread_last)
     del caches
     return analysis, measured_s
 
@@ -122,17 +144,27 @@ def main():
     max_len = 64 if args.dry else 128
     iters = 10 if args.dry else 30
     model, params = _model(max_len)
+    # quantized decode: same step kind, int8 pools + f32 scale pools,
+    # dequantized at read — the HBM stream the quantization halves
+    quant, _ = _model(max_len, kv_quant="int8")
+    # paged split-K: a Pallas kernel (interpret mode off-TPU), one page
+    # per split at max_len/PAGE_SIZE = 4 (dry) / 8 pages
+    splitk, _ = _model(max_len, use_pallas=True,
+                       decode_splits=min(4, max_len // PAGE_SIZE))
 
-    cases = [("dense_decode", "serve"),
-             ("paged_decode", "paged_serve"),
-             ("spec_verify", "spec_serve")]
+    cases = [("dense_decode", "serve", model),
+             ("paged_decode", "paged_serve", model),
+             ("quant_decode", "paged_serve", quant),
+             ("paged_prefill", "paged_prefill_chunk_buf", model),
+             ("paged_splitk", "paged_serve", splitk),
+             ("spec_verify", "spec_serve", model)]
     results = {}
     frac_gauge = registry().gauge(
         "kernel_roofline_fraction",
         "achieved fraction of the analytic roofline", ("kernel",))
-    for name, kind in cases:
+    for name, kind, mdl in cases:
         with section(name):
-            analysis, measured_s = _kernel_case(model, params, kind,
+            analysis, measured_s = _kernel_case(mdl, params, kind,
                                                 max_len=max_len,
                                                 iters=iters)
         terms = roofline(analysis["flops"], analysis["hbm_bytes"],

@@ -43,7 +43,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 DEFAULT_NAMES = ("serve_throughput", "paged_serve", "spec_decode",
                  "cluster_serve", "disagg_serve", "kernel_roofline",
-                 "sharded_decode")
+                 "sharded_decode", "quant_kv")
 
 # (json path into the payload, kind): kind "rate" = higher is better,
 # "latency" = lower is better, gated by the respective tolerance
@@ -91,7 +91,16 @@ METRICS = {
     "kernel_roofline": [
         (("dense_decode", "achieved_fraction"), "rate"),
         (("paged_decode", "achieved_fraction"), "rate"),
+        (("quant_decode", "achieved_fraction"), "rate"),
+        (("paged_prefill", "achieved_fraction"), "rate"),
+        (("paged_splitk", "achieved_fraction"), "rate"),
         (("spec_verify", "achieved_fraction"), "rate"),
+    ],
+    # quantized KV: throughput trends for both engines; the density and
+    # completion claims are BOUNDS (pure functions of shapes / flags)
+    "quant_kv": [
+        (("bf16", "tok_per_s"), "rate"),
+        (("int8", "tok_per_s"), "rate"),
     ],
 }
 
@@ -212,6 +221,40 @@ BOUNDS = {
          "paged decode achieved fraction is positive"),
         (("spec_verify", "achieved_fraction"), lambda v: v > 0,
          "speculative verify achieved fraction is positive"),
+        (("quant_decode", "flops"), lambda v: v > 0,
+         "HLO analyzer counted compute for the quantized decode kernel"),
+        (("quant_decode", "hbm_bytes"), lambda v: v > 0,
+         "HLO analyzer counted HBM traffic for the quantized decode kernel"),
+        (("quant_decode", "achieved_fraction"), lambda v: v > 0,
+         "quantized decode achieved fraction is positive"),
+        (("paged_prefill", "flops"), lambda v: v > 0,
+         "HLO analyzer counted compute for the paged prefill kernel"),
+        (("paged_prefill", "hbm_bytes"), lambda v: v > 0,
+         "HLO analyzer counted HBM traffic for the paged prefill kernel"),
+        (("paged_prefill", "achieved_fraction"), lambda v: v > 0,
+         "paged prefill achieved fraction is positive"),
+        (("paged_splitk", "flops"), lambda v: v > 0,
+         "HLO analyzer counted compute for the paged split-K kernel"),
+        (("paged_splitk", "hbm_bytes"), lambda v: v > 0,
+         "HLO analyzer counted HBM traffic for the paged split-K kernel"),
+        (("paged_splitk", "achieved_fraction"), lambda v: v > 0,
+         "paged split-K achieved fraction is positive"),
+    ],
+    "quant_kv": [
+        # the reservation is a pure function of shapes, so the density
+        # ratio is machine-independent; the benchmark additionally
+        # asserts it against the exact analytic 2D/(D+4) in-process
+        (("kv_bytes_ratio",), lambda v: v >= 1.5,
+         "int8 pools hold >= 1.5x the pages per reserved HBM byte"),
+        (("speed_ratio",), lambda v: v >= 0.5,
+         "int8 engine holds >= 0.5x bf16 tokens/s (dry CPU floor; full "
+         "runs gate parity in-process)"),
+        (("int8", "completed_all"), lambda v: bool(v),
+         "int8 engine served the full shared-prefix trace"),
+        (("bf16", "completed_all"), lambda v: bool(v),
+         "bf16 baseline served the full shared-prefix trace"),
+        (("int8", "prefix_hits"), lambda v: v >= 1,
+         "prefix cache (CoW pages + scales) hits under quantization"),
     ],
 }
 

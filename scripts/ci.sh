@@ -81,6 +81,11 @@ smoke() {
     python -m repro.launch.serve --arch internlm2-1.8b --smoke --requests 6 \
         --slots 2 --max-len 64 --max-new 6 --cache paged --page-size 8
 
+    echo "== quantized paged KV smoke (launcher --kv-dtype int8) =="
+    python -m repro.launch.serve --arch internlm2-1.8b --smoke --requests 6 \
+        --slots 2 --max-len 64 --max-new 6 --cache paged --page-size 8 \
+        --kv-dtype int8
+
     echo "== admission policy smokes (launcher, sampled, 2 tenants) =="
     for policy in fcfs priority sjf drf-fair; do
         python -m repro.launch.serve --arch internlm2-1.8b --smoke \

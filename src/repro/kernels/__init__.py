@@ -3,8 +3,12 @@
 # pure-jnp oracle in ref.py; kernels are validated in interpret mode on CPU.
 from .ops import (attention_ref, decode_attention, decode_attention_ref,
                   flash_attention, paged_decode_attention,
-                  paged_decode_attention_ref, ssd_chunk, ssd_chunk_ref)
+                  paged_decode_attention_quant_ref, paged_decode_attention_ref,
+                  paged_prefill_attention, paged_prefill_attention_ref,
+                  ssd_chunk, ssd_chunk_ref)
 
 __all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
-           "ssd_chunk", "attention_ref", "decode_attention_ref",
-           "paged_decode_attention_ref", "ssd_chunk_ref"]
+           "paged_prefill_attention", "ssd_chunk", "attention_ref",
+           "decode_attention_ref", "paged_decode_attention_ref",
+           "paged_decode_attention_quant_ref", "paged_prefill_attention_ref",
+           "ssd_chunk_ref"]

@@ -15,7 +15,9 @@ import jax.numpy as jnp
 from . import ref
 from .decode_attention import decode_attention_splitk_tpu, decode_attention_tpu
 from .flash_attention import flash_attention_tpu
-from .paged_attention import paged_decode_attention_tpu
+from .paged_attention import (paged_decode_attention_splitk_tpu,
+                              paged_decode_attention_tpu,
+                              paged_prefill_attention_tpu)
 from .ssd_scan import ssd_chunk_tpu
 
 
@@ -67,24 +69,62 @@ def decode_attention(q, k_cache, v_cache, pos, *, active=None, window=0,
     return out.swapaxes(1, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "num_splits",
+                                             "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, page_idx, pos, *, active=None,
-                           window=0, interpret=None):
+                           window=0, k_scale=None, v_scale=None, num_splits=1,
+                           interpret=None):
     """Model layout: q (B,T,H,D); pools (P, page_size, KV, D); page_idx
     (B, max_pages) int32 -> (B,T,H,D).
 
     Paged mirror of ``decode_attention``: the KV stream is gathered
     through the page table by the kernel's scalar-prefetched index_map.
     Unmapped entries must be 0 (null page); ``pos``/``active`` follow the
-    ragged contract.
+    ragged contract.  ``k_scale``/``v_scale`` (P, page_size, KV, 1) f32
+    select the quantized (int8/fp8 pool) path; ``num_splits > 1`` selects
+    the two-phase split-K path (single-token only, splits must divide
+    max_pages — see ``pick_decode_splits``).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     qt = q.swapaxes(1, 2)
     kt = k_pages.swapaxes(1, 2)
     vt = v_pages.swapaxes(1, 2)
-    out = paged_decode_attention_tpu(qt, kt, vt, page_idx, pos,
-                                     active=active, window=window,
-                                     interpret=interpret)
+    kst = k_scale.swapaxes(1, 2) if k_scale is not None else None
+    vst = v_scale.swapaxes(1, 2) if v_scale is not None else None
+    if num_splits > 1 and q.shape[1] == 1:
+        out = paged_decode_attention_splitk_tpu(
+            qt, kt, vt, page_idx, pos, active=active, window=window,
+            num_splits=num_splits, k_scale=kst, v_scale=vst,
+            interpret=interpret)
+    else:
+        out = paged_decode_attention_tpu(qt, kt, vt, page_idx, pos,
+                                         active=active, window=window,
+                                         k_scale=kst, v_scale=vst,
+                                         interpret=interpret)
+    return out.swapaxes(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, page_idx, slot, offset, *,
+                            window=0, k_scale=None, v_scale=None,
+                            interpret=None):
+    """Model layout: q (1,C,H,D) — one slot's prefill chunk at absolute
+    ``offset`` — vs pools (P, page_size, KV, D) through row ``slot`` of
+    ``page_idx (slots, max_pages)``.  Returns (1,C,H,D).
+
+    Fused paged prefill: the chunk's K/V must already be written to the
+    pages; no dense per-slot gather is materialized.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qt = q.swapaxes(1, 2)
+    kt = k_pages.swapaxes(1, 2)
+    vt = v_pages.swapaxes(1, 2)
+    kst = k_scale.swapaxes(1, 2) if k_scale is not None else None
+    vst = v_scale.swapaxes(1, 2) if v_scale is not None else None
+    page_row = jnp.take(jnp.asarray(page_idx, jnp.int32), slot, axis=0)
+    out = paged_prefill_attention_tpu(qt, kt, vt, page_row, offset,
+                                      window=window, k_scale=kst,
+                                      v_scale=vst, interpret=interpret)
     return out.swapaxes(1, 2)
 
 
@@ -99,4 +139,6 @@ def ssd_chunk(x, b, c, dt, cum, *, interpret=None):
 attention_ref = ref.attention_ref
 decode_attention_ref = ref.decode_attention_ref
 paged_decode_attention_ref = ref.paged_decode_attention_ref
+paged_decode_attention_quant_ref = ref.paged_decode_attention_quant_ref
+paged_prefill_attention_ref = ref.paged_prefill_attention_ref
 ssd_chunk_ref = ref.ssd_chunk_ref

@@ -1,7 +1,7 @@
-"""Pallas TPU paged flash-decode: one query token vs a page-table KV pool.
+"""Pallas TPU paged kernels: flash-decode, fused prefill, split-K decode.
 
 The dense ragged kernel (``decode_attention.py``) streams a per-slot
-``(max_len)`` KV stripe; this kernel streams only the pages a slot's page
+``(max_len)`` KV stripe; these kernels stream only the pages a slot's page
 table maps.  K/V live in a global pool ``(P, KV, page_size, D)`` shared by
 every slot, and the indirection is resolved **before** the kernel body runs:
 ``page_idx (B, max_pages)`` rides the same scalar-prefetch channel as
@@ -9,6 +9,25 @@ every slot, and the indirection is resolved **before** the kernel body runs:
 grid step ``(b, h, ip)`` DMAs physical page ``page_idx[b, ip]``.  The
 gather is therefore free: Mosaic issues the indirected DMA directly, no
 materialized (B, S) copy of the cache ever exists.
+
+Three variants share one online-softmax page accumulator:
+
+* ``paged_decode_attention_tpu`` — single pass over a slot's pages,
+  T >= 1 query rows (speculative verify blocks ride the same kernel).
+* ``paged_prefill_attention_tpu`` — one slot's prefill *chunk*
+  (C query rows at absolute offset ``q_offset``) against its own page
+  chain.  This replaces the XLA path's dense per-slot gather: chunked
+  prefill never materializes a (max_len) copy of the cache.
+* ``paged_decode_attention_splitk_tpu`` — two-phase long-context decode.
+  Phase 1 runs ``num_splits`` independent partial softmaxes over disjoint
+  *page ranges* (splits tile by whole pages, never by raw key counts —
+  see ``pick_decode_splits``), phase 2 reuses the dense combine kernel.
+
+Quantized pools: every variant accepts optional per-token/per-head scale
+pools ``(P, KV, page_size, 1)`` f32 riding the same page indirection as
+K/V.  Values are dequantized **inside** the kernel right after the VMEM
+load (``k * k_scale``), so int8/fp8 pools halve/quarter the HBM bytes per
+page while the MXU math stays fp32.
 
 Contract (a strict extension of the ragged dense kernel's):
 
@@ -31,12 +50,58 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .decode_attention import NEG_INF, _block_needed, _normalize_pos
+from .decode_attention import (NEG_INF, _block_needed, _normalize_pos,
+                               _splitk_combine_kernel)
+
+
+def _page_scale_spec(page_size, index_map):
+    return pl.BlockSpec((1, 1, page_size, 1), index_map)
+
+
+def _accumulate_page(q_ref, k_ref, v_ref, ks_ref, vs_ref, m_ref, l_ref,
+                     acc_ref, *, k_start, pos, window, scale, tq, page_size,
+                     quant):
+    """One online-softmax step over one page (shared by all variants).
+
+    ``quant`` dequantizes K/V with the per-token scale blocks right after
+    the VMEM load; fp math is otherwise identical to the unquantized path.
+    """
+    q = q_ref[0, 0].astype(jnp.float32)  # (tq, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (page_size, D)
+    v = v_ref[0, 0]
+    if quant:
+        k = k * ks_ref[0, 0]                       # (page_size, D) * (ps, 1)
+        v = v.astype(jnp.float32) * vs_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tq, page_size), 1)
+    qpos = pos + jax.lax.broadcasted_iota(jnp.int32, (tq, page_size), 0)
+    mask = kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    # mask-gated exp — see _decode_kernel: draft rows fully masked in
+    # a needed page must contribute exactly zero
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
 
 
 def _paged_decode_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref, v_ref,
-                         o_ref, m_ref, l_ref, acc_ref, *, window: int,
-                         page_size: int, scale: float, tq: int):
+                         *rest, window: int, page_size: int, scale: float,
+                         tq: int, quant: bool):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     ib = pl.program_id(0)
     ip = pl.program_id(2)
     n_pages = pl.num_programs(2)
@@ -53,30 +118,9 @@ def _paged_decode_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref, v_ref,
 
     @pl.when(_block_needed(pos, active, k_start, page_size, window, tq))
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)  # (tq, D)
-        k = k_ref[0, 0].astype(jnp.float32)  # (page_size, D)
-        v = v_ref[0, 0]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tq, page_size),
-                                                  1)
-        qpos = pos + jax.lax.broadcasted_iota(jnp.int32, (tq, page_size), 0)
-        mask = kpos <= qpos
-        if window:
-            mask &= qpos - kpos < window
-        s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        # mask-gated exp — see _decode_kernel: draft rows fully masked in
-        # a needed page must contribute exactly zero
-        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
-        pv = jax.lax.dot_general(p.astype(v.dtype), v,
-                                 (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        acc_ref[...] = acc_ref[...] * alpha + pv
-        m_ref[...] = m_new
+        _accumulate_page(q_ref, k_ref, v_ref, ks_ref, vs_ref, m_ref, l_ref,
+                         acc_ref, k_start=k_start, pos=pos, window=window,
+                         scale=scale, tq=tq, page_size=page_size, quant=quant)
 
     @pl.when(ip == n_pages - 1)
     def _finalize():
@@ -85,7 +129,8 @@ def _paged_decode_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref, v_ref,
 
 
 def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
-                               active=None, window=0, interpret=False):
+                               active=None, window=0, k_scale=None,
+                               v_scale=None, interpret=False):
     """q (B, H, T, D); pools (P, KV, page_size, D); page_idx (B, max_pages)
     int32; pos scalar or (B,) int32.  Returns (B, H, T, D).
 
@@ -93,12 +138,15 @@ def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
     entries must be 0 (the null page); ``active`` defaults to ``pos >= 0``.
     T > 1 is the speculative multi-token verify block: query row ``t``
     attends logical keys ``kpos <= pos[b] + t`` — the page indirection
-    never changes the mask math.
+    never changes the mask math.  ``k_scale``/``v_scale``
+    (P, KV, page_size, 1) f32 select the quantized path: K/V blocks are
+    dequantized in VMEM right after the page DMA.
     """
     b, h, tq, d = q.shape
     n_pool, kv, page_size, _ = k_pages.shape
     max_pages = page_idx.shape[1]
     assert page_idx.shape[0] == b, (page_idx.shape, b)
+    quant = k_scale is not None
     g = h // kv
     scale = d ** -0.5
     pos = _normalize_pos(pos, b)
@@ -110,21 +158,24 @@ def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
             jnp.asarray(active, jnp.int32).reshape(-1), (b,))
 
     kernel = functools.partial(_paged_decode_kernel, window=window,
-                               page_size=page_size, scale=scale, tq=tq)
+                               page_size=page_size, scale=scale, tq=tq,
+                               quant=quant)
+    # the paged gather: DMA physical page pt_[b, ip] of the pool
+    kv_map = lambda b_, h_, ip, pt_, pos_, act_: (pt_[b_, ip], h_ // g, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, tq, d),
+                     lambda b_, h_, ip, pt_, pos_, act_: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, d), kv_map),
+        pl.BlockSpec((1, 1, page_size, d), kv_map),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        in_specs += [_page_scale_spec(page_size, kv_map)] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # page_idx, pos, active
         grid=(b, h, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, tq, d),
-                         lambda b_, h_, ip, pt_, pos_, act_: (b_, h_, 0, 0)),
-            # the paged gather: DMA physical page pt_[b, ip] of the pool
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda b_, h_, ip, pt_, pos_, act_:
-                         (pt_[b_, ip], h_ // g, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda b_, h_, ip, pt_, pos_, act_:
-                         (pt_[b_, ip], h_ // g, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, tq, d),
                                lambda b_, h_, ip, pt_, pos_, act_:
                                (b_, h_, 0, 0)),
@@ -138,4 +189,221 @@ def paged_decode_attention_tpu(q, k_pages, v_pages, page_idx, pos, *,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, tq, d), q.dtype),
         interpret=interpret,
-    )(page_idx, pos, active, q, k_pages, v_pages)
+    )(page_idx, pos, active, *operands)
+
+
+# --------------------------------------------------------------- prefill
+def _paged_prefill_kernel(page_ref, off_ref, q_ref, k_ref, v_ref, *rest,
+                          window: int, page_size: int, scale: float, tq: int,
+                          quant: bool):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
+    ip = pl.program_id(1)
+    n_pages = pl.num_programs(1)
+    pos = off_ref[0]  # absolute position of query row 0
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ip * page_size
+
+    @pl.when(_block_needed(pos, 1, k_start, page_size, window, tq))
+    def _compute():
+        _accumulate_page(q_ref, k_ref, v_ref, ks_ref, vs_ref, m_ref, l_ref,
+                         acc_ref, k_start=k_start, pos=pos, window=window,
+                         scale=scale, tq=tq, page_size=page_size, quant=quant)
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_tpu(q, k_pages, v_pages, page_row, q_offset, *,
+                                window=0, k_scale=None, v_scale=None,
+                                interpret=False):
+    """Fused paged prefill: q (1, H, C, D) — one slot's chunk of C query
+    rows at absolute offset ``q_offset`` — vs pools (P, KV, page_size, D)
+    through that slot's page-table row ``page_row (max_pages,)`` int32.
+    Returns (1, H, C, D).
+
+    The chunk's own K/V must already be written to the pages (the update
+    runs first), so row ``t`` attends logical keys
+    ``kpos <= q_offset + t`` — causal against the prefix *and* within the
+    chunk, exactly ``flash_attention_xla(..., q_offset=offset)`` over the
+    gathered view, with the gather folded into the page DMA.
+    """
+    b, h, tq, d = q.shape
+    assert b == 1, ("fused paged prefill is one slot per call", q.shape)
+    _, kv, page_size, _ = k_pages.shape
+    max_pages = page_row.shape[0]
+    quant = k_scale is not None
+    g = h // kv
+    scale = d ** -0.5
+    page_row = jnp.asarray(page_row, jnp.int32).reshape(-1)
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_paged_prefill_kernel, window=window,
+                               page_size=page_size, scale=scale, tq=tq,
+                               quant=quant)
+    kv_map = lambda h_, ip, pr_, off_: (pr_[ip], h_ // g, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, tq, d), lambda h_, ip, pr_, off_: (0, h_, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, d), kv_map),
+        pl.BlockSpec((1, 1, page_size, d), kv_map),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        in_specs += [_page_scale_spec(page_size, kv_map)] * 2
+        operands += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_row, q_offset
+        grid=(h, max_pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, tq, d),
+                               lambda h_, ip, pr_, off_: (0, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, h, tq, d), q.dtype),
+        interpret=interpret,
+    )(page_row, off, *operands)
+
+
+# --------------------------------------------------------------- split-K
+def _paged_splitk_partial_kernel(page_ref, pos_ref, act_ref, q_ref, k_ref,
+                                 v_ref, *rest, window: int, page_size: int,
+                                 pages_per_split: int, scale: float,
+                                 quant: bool):
+    if quant:
+        (ks_ref, vs_ref, o_ref, ms_ref, ls_ref,
+         m_ref, l_ref, acc_ref) = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, ms_ref, ls_ref, m_ref, l_ref, acc_ref = rest
+    ib = pl.program_id(0)
+    isp = pl.program_id(2)
+    ip = pl.program_id(3)
+    pos = pos_ref[ib]
+    active = act_ref[ib]
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # splits tile by whole pages: split isp owns logical pages
+    # [isp * pages_per_split, (isp + 1) * pages_per_split)
+    k_start = (isp * pages_per_split + ip) * page_size
+
+    @pl.when(_block_needed(pos, active, k_start, page_size, window))
+    def _compute():
+        _accumulate_page(q_ref, k_ref, v_ref, ks_ref, vs_ref, m_ref, l_ref,
+                         acc_ref, k_start=k_start, pos=pos, window=window,
+                         scale=scale, tq=1, page_size=page_size, quant=quant)
+
+    @pl.when(ip == pages_per_split - 1)
+    def _emit():
+        # unnormalized: combine phase rescales by exp(m_i - m*) / sum l
+        o_ref[0, 0, 0] = acc_ref[...]
+        ms_ref[0, 0, 0] = m_ref[...]
+        ls_ref[0, 0, 0] = l_ref[...]
+
+
+def paged_decode_attention_splitk_tpu(q, k_pages, v_pages, page_idx, pos, *,
+                                      active=None, window=0, num_splits=4,
+                                      k_scale=None, v_scale=None,
+                                      interpret=False):
+    """Two-phase (split-K) paged flash-decode; same contract as
+    ``paged_decode_attention_tpu`` but phase 1 partitions the *page table*
+    into ``num_splits`` disjoint page ranges (``max_pages % num_splits``
+    must be 0 — splits align to page boundaries, never raw key counts) and
+    phase 2 reuses the dense combine kernel.  Single-token only.
+    """
+    b, h, tq, d = q.shape
+    assert tq == 1, ("split-K paged decode is single-token; multi-token "
+                     "verify uses paged_decode_attention_tpu", q.shape)
+    _, kv, page_size, _ = k_pages.shape
+    max_pages = page_idx.shape[1]
+    ns = num_splits
+    assert max_pages % ns == 0, (
+        "split count must divide max_pages so splits tile whole pages",
+        max_pages, ns)
+    pps = max_pages // ns
+    quant = k_scale is not None
+    g = h // kv
+    scale = d ** -0.5
+    pos = _normalize_pos(pos, b)
+    page_idx = jnp.asarray(page_idx, jnp.int32)
+    if active is None:
+        active = (pos >= 0).astype(jnp.int32)
+    else:
+        active = jnp.broadcast_to(
+            jnp.asarray(active, jnp.int32).reshape(-1), (b,))
+
+    kernel = functools.partial(_paged_splitk_partial_kernel, window=window,
+                               page_size=page_size, pages_per_split=pps,
+                               scale=scale, quant=quant)
+    kv_map = (lambda b_, h_, isp, ip, pt_, pos_, act_:
+              (pt_[b_, isp * pps + ip], h_ // g, 0, 0))
+    part_map = lambda b_, h_, isp, ip, pt_, pos_, act_: (b_, h_, isp, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, d),
+                     lambda b_, h_, isp, ip, pt_, pos_, act_: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, d), kv_map),
+        pl.BlockSpec((1, 1, page_size, d), kv_map),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        in_specs += [_page_scale_spec(page_size, kv_map)] * 2
+        operands += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, ns, pps),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, 1, d), part_map),
+            pl.BlockSpec((1, 1, 1, 1, 1), part_map),
+            pl.BlockSpec((1, 1, 1, 1, 1), part_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    o_parts, ms, ls = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, ns, 1, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, ns, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, ns, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_idx, pos, active, *operands)
+
+    return pl.pallas_call(
+        _splitk_combine_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, ns, d), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, ns, 1), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, ns, 1), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(o_parts.reshape(b, h, ns, d), ms.reshape(b, h, ns, 1),
+      ls.reshape(b, h, ns, 1))

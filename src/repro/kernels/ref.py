@@ -85,6 +85,43 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_idx, pos, *,
     return decode_attention_ref(q, k, v, pos, window=window)
 
 
+def dequantize_ref(pages, scales):
+    """Per-token/per-head dequant: pages (..., page_size, D) int8/fp8,
+    scales (..., page_size, 1) f32 -> f32 values."""
+    return pages.astype(jnp.float32) * scales
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     page_idx, pos, *, window=0):
+    """Oracle for the quantized paged flash-decode kernel.
+
+    Pools (P,KV,page_size,D) int8/fp8 with per-token scales
+    (P,KV,page_size,1) f32.  Dequantizes the whole pool and defers to
+    ``paged_decode_attention_ref`` — the kernel must match this within
+    fp tolerance because both read the *same* quantized values; quant
+    error itself is bounded separately (see tests/test_quant_kv.py).
+    """
+    k = dequantize_ref(k_pages, k_scale)
+    v = dequantize_ref(v_pages, v_scale)
+    return paged_decode_attention_ref(q, k, v, page_idx, pos, window=window)
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, page_row, q_offset, *,
+                                window=0):
+    """Oracle for the fused paged prefill kernel.
+
+    q (1,H,C,D) — one slot's prefill chunk at absolute offset
+    ``q_offset``; pools (P,KV,page_size,D); page_row (max_pages,) int32.
+    Query row ``t`` sits at position ``q_offset + t`` and attends keys
+    ``kpos <= q_offset + t`` — exactly the multi-token ragged contract,
+    so this is ``paged_decode_attention_ref`` with T = C and
+    pos = q_offset.
+    """
+    idx = jnp.asarray(page_row, jnp.int32)[None, :]
+    return paged_decode_attention_ref(q, k_pages, v_pages, idx, q_offset,
+                                      window=window)
+
+
 def ssd_chunk_ref(x, b, c, dt, cum):
     """Oracle for ssd_chunk_tpu (same shapes/contract)."""
     bb, nc, nh, q, hp = x.shape

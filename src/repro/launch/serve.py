@@ -193,6 +193,9 @@ def main():
                     help="pool size (default: dense-equivalent capacity)")
     ap.add_argument("--page-policy", choices=("pack", "spread"),
                     default="pack")
+    ap.add_argument("--kv-dtype", choices=("", "int8", "fp8"), default="",
+                    help="quantize the paged KV pool (per-token scales, "
+                         "dequantized in-kernel); needs --cache paged")
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--replicas", type=int, default=1,
                     help="front N engine replicas with a ClusterRouter")
@@ -244,6 +247,8 @@ def main():
                  f"(got {args.mode!r})")
     if args.speculate and args.draft_k <= 0:
         ap.error(f"--speculate needs --draft-k >= 1 (got {args.draft_k})")
+    if args.kv_dtype and args.cache != "paged":
+        ap.error(f"--kv-dtype {args.kv_dtype} needs --cache paged")
     if args.replicas < 1:
         ap.error(f"--replicas must be >= 1 (got {args.replicas})")
     if args.roles is not None:
@@ -292,7 +297,7 @@ def main():
         batch_slots=args.slots, max_len=args.max_len, mode=args.mode,
         prefill_chunk=args.prefill_chunk, cache=args.cache,
         page_size=args.page_size, num_pages=args.num_pages,
-        page_policy=args.page_policy,
+        page_policy=args.page_policy, kv_dtype=args.kv_dtype,
         prefix_cache=not args.no_prefix_cache, policy=args.policy,
         tenant_weights=args.tenant_weights, preempt=args.preempt,
         victim_policy=args.victim_policy,

@@ -184,7 +184,7 @@ def decode_attention_xla(q, k_cache, v_cache, pos, *, window=0):
 
 
 def paged_decode_attention_xla(q, k_pages, v_pages, page_idx, pos, *,
-                               window=0):
+                               window=0, k_scale=None, v_scale=None):
     """Paged decode attention, XLA reference path.
 
     q (B,T,H,D); pools (P, page_size, KV, D); page_idx (B, max_pages)
@@ -193,16 +193,106 @@ def paged_decode_attention_xla(q, k_pages, v_pages, page_idx, pos, *,
     ``decode_attention_xla`` (T > 1 = the speculative verify block) — the
     Pallas kernel resolves the same indirection inside its
     scalar-prefetched index_map instead of materializing the gather.
+
+    ``k_scale``/``v_scale`` (P, page_size, KV, 1) f32 select the
+    quantized-pool path: the gathered int8/fp8 values are dequantized
+    with their per-token scales (the XLA mirror of the kernel's in-VMEM
+    dequant).
     """
     b = q.shape[0]
     _, page_size, kv, d = k_pages.shape
     max_pages = page_idx.shape[1]
+    s = max_pages * page_size
     idx = jnp.asarray(page_idx, jnp.int32)
-    k = jnp.take(k_pages, idx, axis=0).reshape(b, max_pages * page_size,
-                                               kv, d)
-    v = jnp.take(v_pages, idx, axis=0).reshape(b, max_pages * page_size,
-                                               kv, d)
+    k = jnp.take(k_pages, idx, axis=0).reshape(b, s, kv, d)
+    v = jnp.take(v_pages, idx, axis=0).reshape(b, s, kv, d)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * jnp.take(k_scale, idx,
+                                             axis=0).reshape(b, s, kv, 1)
+        v = v.astype(jnp.float32) * jnp.take(v_scale, idx,
+                                             axis=0).reshape(b, s, kv, 1)
     return decode_attention_xla(q, k, v, pos, window=window)
+
+
+# ------------------------------------------------------------ quantized KV
+KV_QUANT_DTYPES = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
+_KV_QUANT_QMAX = {"int8": 127.0, "fp8": 448.0}  # e4m3fn finite max
+
+
+def kv_quant_dtype(kv_quant: str):
+    """Pool dtype for a ``RuntimeKnobs.kv_quant`` mode string ("" — the
+    unquantized default — maps to None: store at cache_dtype)."""
+    return KV_QUANT_DTYPES[kv_quant] if kv_quant else None
+
+
+def quantize_kv(x, qdtype):
+    """Per-token/per-head symmetric quantization of fresh K/V rows.
+
+    x (..., D) fp -> (q (..., D) ``qdtype``, scale (..., 1) f32) with
+    scale = absmax / qmax over the head dim.  All-zero rows get scale 0
+    (dequant is exactly zero); dequant is ``q.astype(f32) * scale``.
+    """
+    qmax = {jnp.dtype(d): m for d, m in
+            ((KV_QUANT_DTYPES[k], _KV_QUANT_QMAX[k]) for k in
+             KV_QUANT_DTYPES)}[jnp.dtype(qdtype)]
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = amax / qmax
+    inv = jnp.where(amax > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    if jnp.dtype(qdtype) == jnp.dtype(jnp.int8):
+        q = jnp.clip(jnp.round(xf * inv), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = (xf * inv).astype(qdtype)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of ``quantize_kv``: (..., D) quantized + (..., 1) f32."""
+    return q.astype(jnp.float32) * scale
+
+
+def paged_cache_update_quant(k_pages, v_pages, k_scale, v_scale, k_new,
+                             v_new, pos, page_idx, page_size):
+    """Quantized ``paged_cache_update``: quantize the fresh (B,1,KV,D)
+    rows per-token/per-head, scatter values into the int8/fp8 pools and
+    scales into the (P, page_size, KV, 1) f32 scale pools through the
+    same page-table indirection.  Every write is incremental — no
+    read-modify-requantize of existing pages, so quant error never
+    accumulates."""
+    kq, ks = quantize_kv(k_new, k_pages.dtype)
+    vq, vs = quantize_kv(v_new, v_pages.dtype)
+    k_pages, v_pages = paged_cache_update(k_pages, v_pages, kq, vq, pos,
+                                          page_idx, page_size)
+    k_scale, v_scale = paged_cache_update(k_scale, v_scale, ks, vs, pos,
+                                          page_idx, page_size)
+    return k_pages, v_pages, k_scale, v_scale
+
+
+def paged_prefill_chunk_update_quant(k_pages, v_pages, k_scale, v_scale,
+                                     k_new, v_new, slot, offset, page_idx,
+                                     page_size):
+    """Quantized ``paged_prefill_chunk_update`` (same delegation shape as
+    ``paged_cache_update_quant``)."""
+    kq, ks = quantize_kv(k_new, k_pages.dtype)
+    vq, vs = quantize_kv(v_new, v_pages.dtype)
+    k_pages, v_pages = paged_prefill_chunk_update(
+        k_pages, v_pages, kq, vq, slot, offset, page_idx, page_size)
+    k_scale, v_scale = paged_prefill_chunk_update(
+        k_scale, v_scale, ks, vs, slot, offset, page_idx, page_size)
+    return k_pages, v_pages, k_scale, v_scale
+
+
+def paged_cache_update_multi_quant(k_pages, v_pages, k_scale, v_scale,
+                                   k_new, v_new, pos, page_idx, page_size):
+    """Quantized ``paged_cache_update_multi`` (speculative verify
+    blocks)."""
+    kq, ks = quantize_kv(k_new, k_pages.dtype)
+    vq, vs = quantize_kv(v_new, v_pages.dtype)
+    k_pages, v_pages = paged_cache_update_multi(
+        k_pages, v_pages, kq, vq, pos, page_idx, page_size)
+    k_scale, v_scale = paged_cache_update_multi(
+        k_scale, v_scale, ks, vs, pos, page_idx, page_size)
+    return k_pages, v_pages, k_scale, v_scale
 
 
 def paged_cache_update(k_pages, v_pages, k_new, v_new, pos, page_idx,
@@ -247,18 +337,24 @@ def paged_prefill_chunk_update(k_pages, v_pages, k_new, v_new, slot, offset,
     return k_pages, v_pages
 
 
-def gather_slot_pages(k_pages, v_pages, page_idx, slot):
+def gather_slot_pages(k_pages, v_pages, page_idx, slot, k_scale=None,
+                      v_scale=None):
     """Dense (1, S, KV, D) view of one slot's mapped prefix (chunked
     prefill reads through this; unmapped blocks gather the null page and
-    are causally masked)."""
+    are causally masked).  With ``k_scale``/``v_scale`` the quantized
+    pools are gathered *and dequantized* — the view is fp32."""
     _, page_size, kv, d = k_pages.shape
     max_pages = page_idx.shape[1]
+    s = max_pages * page_size
     idx = jnp.asarray(page_idx, jnp.int32)
     row = jax.lax.dynamic_slice(idx, (slot, 0), (1, max_pages))[0]
-    k = jnp.take(k_pages, row, axis=0).reshape(1, max_pages * page_size,
-                                               kv, d)
-    v = jnp.take(v_pages, row, axis=0).reshape(1, max_pages * page_size,
-                                               kv, d)
+    k = jnp.take(k_pages, row, axis=0).reshape(1, s, kv, d)
+    v = jnp.take(v_pages, row, axis=0).reshape(1, s, kv, d)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * jnp.take(k_scale, row,
+                                             axis=0).reshape(1, s, kv, 1)
+        v = v.astype(jnp.float32) * jnp.take(v_scale, row,
+                                             axis=0).reshape(1, s, kv, 1)
     return k, v
 
 

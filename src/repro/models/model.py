@@ -17,7 +17,8 @@ from .transformer import (apply_blocks, apply_blocks_decode,
                           copy_cache_in, copy_cache_out, copy_cache_pages,
                           copy_cache_pages_across, init_blocks, init_cache,
                           init_cache_paged, supports_chunked_prefill,
-                          supports_paged_cache, supports_speculative)
+                          supports_paged_cache, supports_speculative,
+                          unzip_prefill_buf, zip_prefill_buf)
 
 MOE_LB_COEF = 0.01
 MOE_Z_COEF = 1e-3
@@ -43,6 +44,10 @@ class RuntimeKnobs:
     # runtime.steps.pick_decode_splits); >= 1 is a static override.  Both 0
     # and 1 lower to the single-pass kernel outside the engine.
     decode_splits: int = 0
+    # "" = full-precision paged KV; "int8"/"fp8" store quantized page pools
+    # with per-token/per-head scale leaves, dequantized inside the paged
+    # kernels (~2x/4x pages per HBM byte).  Paged caches only.
+    kv_quant: str = ""
     shard_fn: Callable = _identity_shard  # sharding-constraint hook
 
     def with_(self, **kw) -> "RuntimeKnobs":
@@ -220,6 +225,25 @@ class LM:
         x = rmsnorm(params["final_norm"], x)
         logits = unembed(params["embed"], x)[0]
         return logits.astype(jnp.float32), new_caches
+
+    def prefill_chunk_step_paged_buf(self, params, caches, tokens, slot,
+                                     offset, page_idx, buf, *,
+                                     page_size: int, gather: bool = False):
+        """Buffered paged ``prefill_chunk_step`` (XLA path): ``buf`` is a
+        dense ``init_cache(1, max_len)`` tree carried across the chunk
+        loop — each layer reuses its (1, S, KV, D) slot view instead of
+        re-gathering the full page chain every chunk.  ``gather=True``
+        (first chunk of a prefix-cache hit) rebuilds the view from the
+        page table once.  Returns (logits, new caches, new buf)."""
+        merged = zip_prefill_buf(caches, buf)
+        x = embed(params["embed"], tokens).astype(self.knobs.compute_dtype)
+        x, new_merged = apply_blocks_prefill_chunk(
+            params["blocks"], x, merged, slot, offset, cfg=self.cfg,
+            knobs=self.knobs, paged=(page_idx, page_size), gather=gather)
+        new_caches, new_buf = unzip_prefill_buf(new_merged)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)[0]
+        return logits.astype(jnp.float32), new_caches, new_buf
 
     def copy_cache_pages(self, caches, src, dst):
         """Device half of CoW: duplicate physical page src -> dst in every

@@ -203,20 +203,36 @@ def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
     q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
     if paged is not None:
         page_idx, page_size = paged
-        upd = attn.paged_cache_update_multi if t > 1 \
-            else attn.paged_cache_update
-        kc, vc = upd(cache["k"], cache["v"], k_new, v_new, pos, page_idx,
-                     page_size)
+        quant = "k_scale" in cache  # quantized pools carry scale leaves
+        if quant:
+            upd = attn.paged_cache_update_multi_quant if t > 1 \
+                else attn.paged_cache_update_quant
+            kc, vc, ksc, vsc = upd(
+                cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+                k_new, v_new, pos, page_idx, page_size)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            upd = attn.paged_cache_update_multi if t > 1 \
+                else attn.paged_cache_update
+            kc, vc = upd(cache["k"], cache["v"], k_new, v_new, pos, page_idx,
+                         page_size)
+            ksc = vsc = None
+            new_cache = {"k": kc, "v": vc}
         if knobs.use_pallas:
             from repro.kernels import paged_decode_attention as _pallas_paged
 
-            ctx = _pallas_paged(q, kc, vc, page_idx, pos, window=window)
+            ctx = _pallas_paged(q, kc, vc, page_idx, pos, window=window,
+                                k_scale=ksc, v_scale=vsc,
+                                num_splits=knobs.decode_splits if t == 1
+                                else 1)
         else:
             ctx = attn.paged_decode_attention_xla(q, kc, vc, page_idx, pos,
-                                                  window=window)
+                                                  window=window, k_scale=ksc,
+                                                  v_scale=vsc)
     else:
         upd = attn.cache_update_multi if t > 1 else attn.cache_update
         kc, vc = upd(cache["k"], cache["v"], k_new, v_new, pos)
+        new_cache = {"k": kc, "v": vc}
         if knobs.use_pallas:
             from repro.kernels import decode_attention as _pallas_decode
 
@@ -228,12 +244,12 @@ def _apply_attn_block_decode(p, x, cache, pos, *, cfg, window, knobs, ffn,
     ctx = shard_fn("attn_out", ctx)
     x = x + attn.attn_output(p["attn"], ctx)
     h2 = rmsnorm(p["ln2"], x)
-    return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), \
-        {"k": kc, "v": vc}
+    return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), new_cache
 
 
 def _apply_attn_block_prefill_chunk(p, x, cache, slot, offset, *, cfg, window,
-                                    knobs, ffn, shard_fn, paged=None):
+                                    knobs, ffn, shard_fn, paged=None,
+                                    gather=False):
     """One slot's prompt chunk: x (1,C,dm) at absolute positions
     offset..offset+C-1.  Writes the chunk's K/V into cache[slot] in place,
     then runs blocked flash attention of the chunk against the slot's full
@@ -241,17 +257,74 @@ def _apply_attn_block_prefill_chunk(p, x, cache, slot, offset, *, cfg, window,
 
     ``paged = (page_idx, page_size)``: the chunk (C a page multiple,
     offset page-aligned) lands in the physical pages the slot's table
-    maps, and the prefix is read back through the same indirection."""
+    maps, and the prefix is read back through the same indirection:
+
+    * ``knobs.use_pallas`` — the fused paged prefill kernel reads K/V
+      through the page table directly; no dense per-slot copy exists.
+    * XLA with ``gk``/``gv`` leaves in ``cache`` — a dense (1, S, KV, D)
+      per-slot gather *buffer* carried across chunks (zipped in by
+      ``zip_prefill_buf``): chunk 0 of a prefix-cache hit re-gathers it
+      once (``gather=True``); every other chunk just inserts its own
+      fresh K/V, so the old per-chunk full-length gather is gone.
+    * XLA without a buffer — the legacy full gather per chunk, kept as
+      the parity oracle for both fast paths.
+    """
     c = x.shape[1]
     h = rmsnorm(p["ln1"], x)
     positions = offset + jnp.arange(c)[None, :]
     q, k_new, v_new = attn.qkv_project(p["attn"], h, positions, cfg.rope_theta)
     if paged is not None:
         page_idx, page_size = paged
-        kc, vc = attn.paged_prefill_chunk_update(
-            cache["k"], cache["v"], k_new, v_new, slot, offset, page_idx,
-            page_size)
-        k_slot, v_slot = attn.gather_slot_pages(kc, vc, page_idx, slot)
+        quant = "k_scale" in cache
+        if quant:
+            kc, vc, ksc, vsc = attn.paged_prefill_chunk_update_quant(
+                cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+                k_new, v_new, slot, offset, page_idx, page_size)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kc, vc = attn.paged_prefill_chunk_update(
+                cache["k"], cache["v"], k_new, v_new, slot, offset, page_idx,
+                page_size)
+            ksc = vsc = None
+            new_cache = {"k": kc, "v": vc}
+        if knobs.use_pallas:
+            from repro.kernels import paged_prefill_attention as _pallas_pf
+
+            if "gk" in cache:  # buffer unused on the fused path
+                new_cache["gk"], new_cache["gv"] = cache["gk"], cache["gv"]
+            ctx = _pallas_pf(q, kc, vc, page_idx, slot, offset,
+                             window=window, k_scale=ksc, v_scale=vsc)
+        else:
+            if "gk" in cache:
+                if gather:  # first chunk of a prefix hit: rebuild the view
+                    gk, gv = attn.gather_slot_pages(kc, vc, page_idx, slot,
+                                                    k_scale=ksc, v_scale=vsc)
+                    gk = gk.astype(cache["gk"].dtype)
+                    gv = gv.astype(cache["gv"].dtype)
+                else:  # steady state: insert only this chunk's fresh K/V
+                    if quant:  # round-trip so the buffer holds exactly
+                        # what a page gather would return
+                        k_ins = attn.dequantize_kv(
+                            *attn.quantize_kv(k_new, kc.dtype))
+                        v_ins = attn.dequantize_kv(
+                            *attn.quantize_kv(v_new, vc.dtype))
+                    else:
+                        k_ins, v_ins = k_new, v_new
+                    gk = jax.lax.dynamic_update_slice(
+                        cache["gk"], k_ins.astype(cache["gk"].dtype),
+                        (0, offset, 0, 0))
+                    gv = jax.lax.dynamic_update_slice(
+                        cache["gv"], v_ins.astype(cache["gv"].dtype),
+                        (0, offset, 0, 0))
+                new_cache["gk"], new_cache["gv"] = gk, gv
+                k_slot, v_slot = gk, gv
+            else:
+                k_slot, v_slot = attn.gather_slot_pages(
+                    kc, vc, page_idx, slot, k_scale=ksc, v_scale=vsc)
+            ctx = attn.flash_attention_xla(q, k_slot, v_slot, causal=True,
+                                           window=window,
+                                           q_chunk=min(knobs.q_chunk, c),
+                                           q_offset=offset)
     else:
         kc = jax.lax.dynamic_update_slice(cache["k"],
                                           k_new.astype(cache["k"].dtype),
@@ -259,17 +332,17 @@ def _apply_attn_block_prefill_chunk(p, x, cache, slot, offset, *, cfg, window,
         vc = jax.lax.dynamic_update_slice(cache["v"],
                                           v_new.astype(cache["v"].dtype),
                                           (slot, offset, 0, 0))
+        new_cache = {"k": kc, "v": vc}
         k_slot = jax.lax.dynamic_slice_in_dim(kc, slot, 1, axis=0)
         v_slot = jax.lax.dynamic_slice_in_dim(vc, slot, 1, axis=0)
-    ctx = attn.flash_attention_xla(q, k_slot, v_slot, causal=True,
-                                   window=window,
-                                   q_chunk=min(knobs.q_chunk, c),
-                                   q_offset=offset)
+        ctx = attn.flash_attention_xla(q, k_slot, v_slot, causal=True,
+                                       window=window,
+                                       q_chunk=min(knobs.q_chunk, c),
+                                       q_offset=offset)
     ctx = shard_fn("attn_out", ctx)
     x = x + attn.attn_output(p["attn"], ctx)
     h2 = rmsnorm(p["ln2"], x)
-    return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), \
-        {"k": kc, "v": vc}
+    return x + _ffn_out(p, h2, ffn, cfg=cfg, shard_fn=shard_fn), new_cache
 
 
 def _apply_ssm_block(p, x, *, cfg, collect_cache, shard_fn,
@@ -457,10 +530,15 @@ def supports_speculative(cfg) -> bool:
 
 
 def apply_blocks_prefill_chunk(blocks, x, caches, slot, offset, *, cfg,
-                               knobs, paged=None):
+                               knobs, paged=None, gather=False):
     """Run ONE slot's prompt chunk x (1,C,dm) through all layers, writing
     each layer's K/V into ``caches`` at (slot, offset) in place.  Returns
-    (hidden (1,C,dm), new caches).  Attention-only plans."""
+    (hidden (1,C,dm), new caches).  Attention-only plans.
+
+    ``gather`` (paged XLA path with a zipped-in gather buffer only):
+    re-initialize each layer's dense slot view from the page table before
+    attending — the first chunk of a prefix-cache hit, where pages below
+    ``offset`` were adopted rather than written by this prefill."""
     plan = build_plan(cfg)
     if plan.inner_kind != "attn":
         raise NotImplementedError(
@@ -471,15 +549,44 @@ def apply_blocks_prefill_chunk(blocks, x, caches, slot, offset, *, cfg,
     def inner_fn(p, xx, cache, window):
         return _apply_attn_block_prefill_chunk(
             p, xx, cache, slot, offset, cfg=cfg, window=window, knobs=knobs,
-            ffn=ffn, shard_fn=shard_fn, paged=paged)
+            ffn=ffn, shard_fn=shard_fn, paged=paged, gather=gather)
 
     def outer_fn(p, xx, cache, window, offn):
         return _apply_attn_block_prefill_chunk(
             p, xx, cache, slot, offset, cfg=cfg, window=window, knobs=knobs,
-            ffn=offn, shard_fn=shard_fn, paged=paged)
+            ffn=offn, shard_fn=shard_fn, paged=paged, gather=gather)
 
     return _walk_plan_cached(blocks, x, caches, cfg=cfg, inner_fn=inner_fn,
                              outer_fn=outer_fn)
+
+
+# ------------------------------------------------- prefill gather buffer
+def zip_prefill_buf(caches, buf):
+    """Merge a dense per-slot gather buffer (an ``init_cache(1, max_len)``
+    tree) into a paged cache tree as ``gk``/``gv`` keys on every attn
+    leaf dict, so the plan walker threads buffer and pools through the
+    layer scan together.  The buffer is the chunked-prefill fix: one
+    (1, S, KV, D) view per layer reused across chunks instead of a fresh
+    full-length gather per chunk."""
+    if isinstance(caches, dict) and "k" in caches \
+            and not isinstance(caches["k"], dict):
+        out = dict(caches)
+        out["gk"] = buf["k"]
+        out["gv"] = buf["v"]
+        return out
+    return {key: zip_prefill_buf(caches[key], buf[key]) for key in caches}
+
+
+def unzip_prefill_buf(merged):
+    """Inverse of ``zip_prefill_buf``: (paged caches, buffer tree)."""
+    if isinstance(merged, dict) and "gk" in merged \
+            and not isinstance(merged["gk"], dict):
+        cache = {key: val for key, val in merged.items()
+                 if key not in ("gk", "gv")}
+        return cache, {"k": merged["gk"], "v": merged["gv"]}
+    pairs = {key: unzip_prefill_buf(merged[key]) for key in merged}
+    return ({key: c for key, (c, _) in pairs.items()},
+            {key: b for key, (_, b) in pairs.items()})
 
 
 # ============================================================== cache init
@@ -521,19 +628,34 @@ def init_cache_paged(cfg, knobs, num_pages: int, page_size: int):
     leaf is a global (num_pages, page_size, KV, D) pool shared by all
     slots instead of a per-slot (batch, max_len) stripe.  One page table
     addresses every layer — the stacked layer axes mean a (page, offset)
-    coordinate is valid in each pool."""
+    coordinate is valid in each pool.
+
+    ``knobs.kv_quant`` ("int8"/"fp8") stores quantized pools plus
+    per-token/per-head scale leaves ``k_scale``/``v_scale``
+    (num_pages, page_size, KV, 1) f32.  Scales keep the page axis at
+    ndim-4 like every other paged leaf, so ``copy_cache_pages`` /
+    ``copy_cache_pages_across`` move them with their pages automatically
+    — CoW and disagg handoff need no special casing."""
     if not supports_paged_cache(cfg):
         raise NotImplementedError(
             f"paged KV cache unsupported for family={cfg.family!r}")
     plan = build_plan(cfg)
 
     def attn_cache():
-        return {
+        dt = (attn.KV_QUANT_DTYPES[knobs.kv_quant] if knobs.kv_quant
+              else knobs.cache_dtype)
+        cache = {
             "k": jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
-                            cfg.head_dim), knobs.cache_dtype),
+                            cfg.head_dim), dt),
             "v": jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
-                            cfg.head_dim), knobs.cache_dtype),
+                            cfg.head_dim), dt),
         }
+        if knobs.kv_quant:
+            cache["k_scale"] = jnp.zeros(
+                (num_pages, page_size, cfg.num_kv_heads, 1), jnp.float32)
+            cache["v_scale"] = jnp.zeros(
+                (num_pages, page_size, cfg.num_kv_heads, 1), jnp.float32)
+        return cache
 
     def stack(n, fn):
         return jax.tree.map(

@@ -37,6 +37,7 @@ the (src, dst) page-copy list that admission returns.
 from __future__ import annotations
 
 import hashlib
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
@@ -139,10 +140,18 @@ class PagePool:
         assert page_size >= 1
         assert num_hosts >= 1
         if num_hosts > 1 and num_pages % num_hosts:
-            raise ValueError(
+            # host sub-pools must tile the pool evenly (the device page
+            # dim shards over the data axes) — round capacity UP rather
+            # than refuse, so a caller-sized pool never silently shrinks
+            # and never hard-errors.  Callers that size device arrays
+            # from the pool must read back ``pool.num_pages``.
+            rounded = -(-num_pages // num_hosts) * num_hosts
+            warnings.warn(
                 f"num_pages {num_pages} not divisible by num_hosts "
-                f"{num_hosts} (host sub-pools must align with the device "
-                f"shard of the page dim)")
+                f"{num_hosts}; rounding up to {rounded} so host sub-pools "
+                f"align with the device shard of the page dim",
+                RuntimeWarning, stacklevel=2)
+            num_pages = rounded
         self.num_pages = num_pages
         self.page_size = page_size
         self.num_banks = max(1, min(num_banks, num_pages - 1))

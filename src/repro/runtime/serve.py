@@ -297,6 +297,13 @@ class ServeConfig:
     num_pages: Optional[int] = None
     page_policy: str = "pack"
     prefix_cache: bool = True
+    # quantized paged KV: "" (store at RuntimeKnobs.cache_dtype), "int8"
+    # or "fp8" (float8_e4m3fn).  Pages hold quantized K/V with per-token
+    # per-head f32 scales alongside ("k_scale"/"v_scale" pool leaves);
+    # the attention kernels dequantize at read — ~2x pages per HBM byte
+    # at int8.  Requires cache="paged"; composes with prefix sharing and
+    # disaggregation (scales travel with pages).  See docs/paged_kv.md.
+    kv_dtype: str = ""
     policy: str = "fcfs"
     on_stall: str = "raise"
     tenant_weights: Optional[dict] = None
@@ -374,6 +381,21 @@ class ServeEngine:
             if config.draft_k + 1 >= config.max_len:
                 raise ValueError(f"draft_k {config.draft_k} too deep for "
                                  f"max_len {config.max_len}")
+        if config.kv_dtype:
+            if config.cache != "paged":
+                raise ValueError("kv_dtype requires cache='paged' (dense "
+                                 "caches store at RuntimeKnobs.cache_dtype)")
+            if config.kv_dtype not in ("int8", "fp8"):
+                raise ValueError(f"unknown kv_dtype {config.kv_dtype!r} "
+                                 f"(expected int8/fp8)")
+            # quantization is a model-layout property: rebuild with the
+            # kv_quant knob so cache init/update/attention all agree (the
+            # knob keys the compiled-step cache, so quantized and plain
+            # engines over one config never share a step)
+            if model.knobs.kv_quant != config.kv_dtype:
+                model = type(model)(
+                    model.cfg,
+                    model.knobs.with_(kv_quant=config.kv_dtype))
         # ---- device mesh: shard this replica without changing its output
         self._batch_sharding = None
         self._num_hosts = 1
@@ -437,6 +459,7 @@ class ServeEngine:
         # checkpoint/restore (dense): built on first preemption
         self._copy_out = self._copy_in = None
         self.kv: Optional[KVCacheManager] = None
+        self._pf_buf = None  # dense (1, max_len) slot view, XLA paged only
         if config.cache == "paged":
             if config.mode != "continuous":
                 raise ValueError("cache='paged' requires mode='continuous'")
@@ -473,6 +496,9 @@ class ServeEngine:
                 num_pages=num_pages, policy=config.page_policy,
                 prefix_cache=config.prefix_cache, chunk=c,
                 num_hosts=self._num_hosts)
+            # the pool may round capacity up (num_hosts alignment): size
+            # the device pools from what it actually holds, never the ask
+            num_pages = self.kv.pool.num_pages
             self.caches = model.init_cache_paged(num_pages, page_size)
             # greedy and sampled variants both exist (jit is lazy — only
             # the ones a trace actually hits compile); a tick pays the
@@ -482,11 +508,32 @@ class ServeEngine:
             self._step_sampled = compiled_step(model, "paged_serve",
                                                page_size=page_size,
                                                sampled=True)
-            self._prefill = compiled_step(model, "paged_prefill_chunk",
-                                          page_size=page_size)
-            self._prefill_sampled = compiled_step(
-                model, "paged_prefill_chunk", page_size=page_size,
-                sampled=True)
+            if model.knobs.use_pallas:
+                # fused paged prefill kernel reads K/V through the page
+                # table — no dense slot view to maintain
+                self._pf_buf = None
+                self._prefill = compiled_step(
+                    model, "paged_prefill_chunk", page_size=page_size)
+                self._prefill_sampled = compiled_step(
+                    model, "paged_prefill_chunk", page_size=page_size,
+                    sampled=True)
+            else:
+                # XLA path: carry one dense (1, max_len) slot view across
+                # the chunk loop so each chunk inserts C rows instead of
+                # re-gathering the whole page chain (the gather variant
+                # rebuilds the view once on a prefix-cache hit)
+                self._pf_buf = model.init_cache(1, max_len)
+                self._prefill = compiled_step(
+                    model, "paged_prefill_chunk_buf", page_size=page_size)
+                self._prefill_sampled = compiled_step(
+                    model, "paged_prefill_chunk_buf", page_size=page_size,
+                    sampled=True)
+                self._prefill_gather = compiled_step(
+                    model, "paged_prefill_chunk_buf_gather",
+                    page_size=page_size)
+                self._prefill_gather_sampled = compiled_step(
+                    model, "paged_prefill_chunk_buf_gather",
+                    page_size=page_size, sampled=True)
         else:
             self.caches = model.init_cache(batch_slots, max_len)
             self._step = compiled_step(model, "serve")
@@ -541,9 +588,11 @@ class ServeEngine:
                                    weights=config.tenant_weights,
                                    preempt=config.preempt,
                                    victim=config.victim_policy)
-        # split-K autotune (dense Pallas decode only): pick the fan-out
-        # per tick from (max(pos), live slots); each compiles once.
-        self._autotune = (config.cache == "dense"
+        # split-K autotune (Pallas decode, dense AND paged): pick the
+        # fan-out per tick from (max(pos), live slots); each compiles
+        # once.  The paged variant tiles by whole pages, so the picker
+        # gets page_size and constrains splits to divide max_pages.
+        self._autotune = (config.cache in ("dense", "paged")
                           and config.mode == "continuous"
                           and model.knobs.use_pallas
                           and model.knobs.decode_splits == 0)
@@ -879,7 +928,24 @@ class ServeEngine:
             last = (p - start - 1) - ci * c  # final-chunk row of the
             last_row = last if 0 <= last < c else 0  # last real token
             chunk = jnp.asarray(padded[None, ci * c:(ci + 1) * c])
-            if sampling:
+            if self._pf_buf is not None:
+                # buffered paged prefill: thread the dense slot view
+                # through the chunk loop; a prefix-cache hit rebuilds it
+                # from the page table on the first chunk only
+                fn = prefill
+                if ci == 0 and start > 0:
+                    fn = (self._prefill_gather_sampled if sampling
+                          else self._prefill_gather)
+                if sampling:
+                    nxt, self.caches, self._pf_buf = fn(
+                        self.params, self.caches, chunk, jnp.int32(s),
+                        jnp.int32(start + ci * c), *extra, self._pf_buf,
+                        jnp.int32(last_row), *samp)
+                else:
+                    nxt, self.caches, self._pf_buf = fn(
+                        self.params, self.caches, chunk, jnp.int32(s),
+                        jnp.int32(start + ci * c), *extra, self._pf_buf)
+            elif sampling:
                 nxt, self.caches = prefill(
                     self.params, self.caches, chunk, jnp.int32(s),
                     jnp.int32(start + ci * c), *extra,
@@ -954,12 +1020,17 @@ class ServeEngine:
         return a
 
     def _step_for_splits(self, splits: int, sampled: bool):
-        """Dense decode step with a given split-K fan-out (fan-outs from
-        the small set the heuristic emits: 1, 2, 4, 8).  Resolution goes
-        through the module-level step cache, so every engine over the
-        same model shares one compiled callable per fan-out."""
+        """Decode step with a given split-K fan-out (fan-outs from the
+        small set the heuristic emits: 1, 2, 4, 8), for whichever cache
+        layout this engine runs.  Resolution goes through the
+        module-level step cache, so every engine over the same model
+        shares one compiled callable per fan-out."""
         if splits <= 1:
             return self._step_sampled if sampled else self._step
+        if self.kv is not None:
+            return compiled_step(self.model, "paged_serve", sampled=sampled,
+                                 page_size=self.config.page_size,
+                                 decode_splits=splits)
         return compiled_step(self.model, "serve", sampled=sampled,
                              decode_splits=splits)
 
@@ -995,6 +1066,10 @@ class ServeEngine:
                  self._put_b(self.samp_topp), self._put_b(self.samp_keys)))
         if self.kv is not None:
             step = self._step_sampled if sampling else self._step
+            if self._autotune:
+                step = self._step_for_splits(pick_decode_splits(
+                    int(self.pos.max()), live, max_len=self.max_len,
+                    page_size=self.config.page_size), sampling)
             nxt_dev, self.caches = step(
                 self.params, self.caches, self._put_b(self.tokens), pos,
                 jnp.asarray(self.kv.page_table), *samp)

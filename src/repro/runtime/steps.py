@@ -150,6 +150,37 @@ def make_prefill_chunk_step(model, sampled: bool = False) -> Callable:
     return sampled_chunk_step if sampled else prefill_chunk_step
 
 
+def make_paged_prefill_chunk_buf_step(model, page_size: int,
+                                      sampled: bool = False,
+                                      gather: bool = False) -> Callable:
+    """Buffered paged chunked prefill (XLA path): threads the per-layer
+    dense gather buffer through the step so chunk N reuses chunk N-1's
+    slot view instead of re-gathering the full page chain.  Signature
+    grows ``buf`` after ``page_idx`` and the step returns
+    (tokens, new caches, new buf); ``gather=True`` is the first-chunk
+    variant of a prefix-cache hit (rebuilds the view from the table)."""
+    def prefill_chunk_step(params, caches, tokens, slot, offset, page_idx,
+                           buf):
+        logits, new_caches, new_buf = model.prefill_chunk_step_paged_buf(
+            params, caches, tokens, slot, offset, page_idx, buf,
+            page_size=page_size, gather=gather)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_caches, new_buf
+
+    def sampled_chunk_step(params, caches, tokens, slot, offset, page_idx,
+                           buf, last_row, temp, top_k, top_p, key):
+        logits, new_caches, new_buf = model.prefill_chunk_step_paged_buf(
+            params, caches, tokens, slot, offset, page_idx, buf,
+            page_size=page_size, gather=gather)
+        row = jax.lax.dynamic_index_in_dim(logits, last_row, 0,
+                                           keepdims=True)
+        tok = sample_tokens(row, (offset + last_row)[None], temp[None],
+                            top_k[None], top_p[None], key[None])[0]
+        return tok, new_caches, new_buf
+
+    return sampled_chunk_step if sampled else prefill_chunk_step
+
+
 # ------------------------------------------------------------- speculative
 def make_spec_serve_step(model, draft_len: int,
                          sampled: bool = False) -> Callable:
@@ -271,10 +302,23 @@ _STEP_KINDS = {
         lambda m, ps, s, dl: make_paged_serve_step(m, ps, sampled=s),
     "paged_prefill_chunk":
         lambda m, ps, s, dl: make_paged_prefill_chunk_step(m, ps, sampled=s),
+    "paged_prefill_chunk_buf":
+        lambda m, ps, s, dl: make_paged_prefill_chunk_buf_step(
+            m, ps, sampled=s, gather=False),
+    "paged_prefill_chunk_buf_gather":
+        lambda m, ps, s, dl: make_paged_prefill_chunk_buf_step(
+            m, ps, sampled=s, gather=True),
     "spec_serve": lambda m, ps, s, dl: make_spec_serve_step(m, dl, sampled=s),
     "paged_spec_serve":
         lambda m, ps, s, dl: make_paged_spec_serve_step(m, ps, dl, sampled=s),
     "decode_one": lambda m, ps, s, dl: m.decode_step,
+}
+# Steps that thread extra donatable state beyond the caches (argnum 1).
+# The buffered prefill steps also consume/return the dense gather buffer
+# at argnum 6, so donate it too and XLA reuses the allocation per chunk.
+_STEP_DONATE = {
+    "paged_prefill_chunk_buf": (1, 6),
+    "paged_prefill_chunk_buf_gather": (1, 6),
 }
 _STEP_CACHE: OrderedDict = OrderedDict()
 _STEP_CACHE_MAX = 64
@@ -333,12 +377,13 @@ def compiled_step(model, kind: str, *, sampled: bool = False,
         return _STEP_KINDS[kind](mdl, page_size, sampled, draft_len)
 
     return compiled_fn((model.cfg, knobs, kind, sampled, page_size,
-                        draft_len), build, donate=(1,))
+                        draft_len), build,
+                       donate=_STEP_DONATE.get(kind, (1,)))
 
 
 # -------------------------------------------------------- split-K autotune
 def pick_decode_splits(max_pos: int, batch: int, *, max_len: int,
-                       override: int = 0) -> int:
+                       page_size: int = 0, override: int = 0) -> int:
     """Choose the split-K fan-out for this decode tick.
 
     Split-K buys concurrency on the KV HBM stream: with few live slots
@@ -348,18 +393,29 @@ def pick_decode_splits(max_pos: int, batch: int, *, max_len: int,
 
     Heuristic: double the splits while (a) each split still covers >= 2k
     tokens of live prefix, (b) total concurrent streams (batch * splits)
-    stay <= 32, and (c) the split count divides ``max_len`` (the kernel
-    partitions the padded cache axis).  ``override >= 1`` (the
-    ``RuntimeKnobs.decode_splits`` static knob) bypasses the heuristic.
+    stay <= 32, and (c) the split count divides the kernel's partition
+    axis.  The dense kernel partitions the padded cache axis
+    (``max_len``); the paged kernel tiles by whole pages, so with
+    ``page_size > 0`` the splits must divide ``max_len // page_size``
+    (the per-slot page count) — dividing ``max_len`` alone is not
+    enough (e.g. max_len=96, page_size=16: 4 divides 96 but not the
+    6 pages).  ``override >= 1`` (the ``RuntimeKnobs.decode_splits``
+    static knob) bypasses the heuristic but is still clamped down to a
+    divisor of the partition axis so a misconfigured knob cannot hand
+    the kernel a ragged tiling.
     """
+    units = max_len // page_size if page_size > 0 else max_len
     if override >= 1:
-        return override
+        splits = override
+        while splits > 1 and units % splits:
+            splits -= 1
+        return splits
     if max_pos < 2048:
         return 1
     splits = 1
     while (splits < 8
            and max_pos // (2 * splits) >= 2048
            and 2 * splits * max(batch, 1) <= 32
-           and max_len % (2 * splits) == 0):
+           and units % (2 * splits) == 0):
         splits *= 2
     return splits

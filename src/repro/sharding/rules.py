@@ -267,8 +267,11 @@ def serve_cache_shardings(mesh: Mesh, cache_specs, *, paged: bool = False):
         pstr = _path_str(path)
         key = pstr.rsplit("/", 1)[-1]
         shape = leaf.shape
-        if key in ("k", "v"):
-            lead = len(shape) - 4  # (B|P, S|page_size, KV, hd)
+        if key in ("k", "v", "k_scale", "v_scale"):
+            # quantization scales share the pool layout with hd == 1
+            # (P, page_size, KV, 1): same rule places them with their
+            # pages so a page and its scale never live on different hosts
+            lead = len(shape) - 4  # (B|P, S|page_size, KV, hd|1)
             base = [None] * lead
             cands = []
             if dp:

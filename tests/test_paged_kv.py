@@ -488,3 +488,148 @@ def test_autotune_enabled_only_for_dense_pallas_auto():
     # fan-out 1 resolves to the engine's base steps (no split-K rebuild)
     assert eng._step_for_splits(1, False) is eng._step
     assert eng._step_for_splits(1, True) is eng._step_sampled
+
+
+@pytest.mark.parametrize("max_len,page_size", [
+    (64, 8), (64, 16), (96, 16), (96, 32), (128, 16), (1 << 15, 32),
+    (12_288, 16), (2048, 2048)])
+def test_pick_decode_splits_divides_page_count(max_len, page_size):
+    """Bugfix regression: the paged kernel tiles by whole pages, so the
+    chosen fan-out must divide max_pages = max_len // page_size —
+    dividing max_len alone is not enough (96/16 = 6 pages: 4 divides 96
+    but not 6)."""
+    max_pages = max_len // page_size
+    for max_pos, batch in ((100, 1), (3000, 1), (32_000, 1), (32_000, 8),
+                           (1 << 20, 2)):
+        s = pick_decode_splits(max_pos, batch, max_len=max_len,
+                               page_size=page_size)
+        assert max_pages % s == 0, (max_pos, batch, s)
+    for override in (2, 3, 4, 5, 8):
+        s = pick_decode_splits(32_000, 1, max_len=max_len,
+                               page_size=page_size, override=override)
+        assert max_pages % s == 0 and 1 <= s <= override
+
+
+def test_pick_decode_splits_paged_vs_dense_divisor():
+    # the motivating misalignment: old logic picked 4 here (4 | 96)
+    assert pick_decode_splits(32_000, 1, max_len=96, page_size=16) == 2
+    # dense behaviour unchanged by the new keyword's default
+    assert pick_decode_splits(32_000, 1, max_len=96) == \
+        pick_decode_splits(32_000, 1, max_len=96, page_size=0)
+    # a misaligned static override is clamped down to a divisor
+    assert pick_decode_splits(10, 1, max_len=96, page_size=16,
+                              override=4) == 3
+
+
+# ----------------------------------------------- host-aligned pool sizing
+def test_pool_rounds_up_num_pages_to_host_multiple():
+    """Satellite regression: an unaligned num_pages is rounded UP (with
+    a warning) instead of raising — capacity never silently shrinks and
+    the host sub-pools stay equal."""
+    with pytest.warns(RuntimeWarning, match="rounding up"):
+        pool = PagePool(10, 8, num_hosts=4)
+    assert pool.num_pages == 12
+    assert pool.capacity == 11
+    assert sum(pool.free_by_host()) == pool.available
+    assert [pool.host_of(p) for p in (0, 2, 3, 11)] == [0, 0, 1, 3]
+    # aligned pools stay warning-free
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert PagePool(12, 8, num_hosts=4).num_pages == 12
+    with pytest.warns(RuntimeWarning):
+        m = KVCacheManager(slots=2, max_len=32, page_size=8, num_pages=9,
+                           num_hosts=2)
+    assert m.pool.num_pages == 10
+    # the manager still admits/frees cleanly over the rounded pool
+    assert m.admit(0, np.arange(9, dtype=np.int32), max_new=4) is not None
+    m.free_slot(0)
+    assert m.pool.in_use == 0
+
+
+# -------------------------------------------- buffered prefill / split-K
+def _chunked_prefill(step, model, prompt, pt, c, *, buffered):
+    """Drive a compiled paged chunked-prefill step over one slot's
+    prompt; returns the per-chunk next-token arrays and final caches."""
+    caches = model.init_cache_paged(num_pages=1 + pt.shape[1], page_size=8)
+    buf = model.init_cache(1, 32)
+    outs = []
+    for ci in range(len(prompt) // c):
+        chunk = jnp.asarray(prompt[None, ci * c:(ci + 1) * c])
+        args = (model.init(jax.random.PRNGKey(0)), caches, chunk,
+                jnp.int32(0), jnp.int32(ci * c), jnp.asarray(pt))
+        if buffered:
+            nxt, caches, buf = step(*args, buf)
+        else:
+            nxt, caches = step(*args)
+        outs.append(np.asarray(nxt))
+    return outs, caches
+
+
+def test_buffered_prefill_matches_legacy_gather_step():
+    """The buffered XLA chunked-prefill step (reusing the dense slot
+    view across chunks) is bitwise-identical to the legacy per-chunk
+    full-gather step — the retained parity oracle."""
+    from repro.runtime.steps import compiled_step
+
+    model, params = tiny_lm()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, 60, size=24).astype(np.int32)
+    pt = np.array([[1, 2, 3, 4]], np.int32)
+    legacy = compiled_step(model, "paged_prefill_chunk", page_size=8)
+    buf_step = compiled_step(model, "paged_prefill_chunk_buf", page_size=8)
+    ref_outs, ref_caches = _chunked_prefill(legacy, model, prompt, pt, 8,
+                                            buffered=False)
+    got_outs, got_caches = _chunked_prefill(buf_step, model, prompt, pt, 8,
+                                            buffered=True)
+    assert all((a == b).all() for a, b in zip(got_outs, ref_outs))
+    for a, b in zip(jax.tree.leaves(got_caches),
+                    jax.tree.leaves(ref_caches)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+@pytest.mark.slow  # engine-equality suite: full-suite lane
+def test_paged_pallas_engine_matches_xla_bitwise():
+    """Fused Pallas paged prefill + decode vs the XLA buffered path:
+    identical token streams (greedy and seeded-sampled), including
+    prefix-cache hits (the gather-variant first chunk)."""
+    from repro.runtime.sampling import SamplingParams
+
+    model, params = tiny_lm()
+    pallas = LM(model.cfg, model.knobs.with_(use_pallas=True))
+    for sampled in (False, True):
+        outs = {}
+        for name, m in (("xla", model), ("pallas", pallas)):
+            eng = ServeEngine(m, params,
+                              ServeConfig(batch_slots=2, max_len=64,
+                                          cache="paged", page_size=8,
+                                          prefill_chunk=16))
+            for r in _shared_prefix_trace(7, shared_len=17):
+                sp = (SamplingParams(temperature=0.7, top_k=16, seed=3)
+                      if sampled and r.req_id % 2 else SamplingParams())
+                eng.submit(Request(r.req_id, r.prompt.copy(),
+                                   max_new_tokens=6, sampling=sp))
+            outs[name] = {r.req_id: r.output for r in eng.run()}
+        assert outs["pallas"] == outs["xla"], f"sampled={sampled}"
+
+
+@pytest.mark.slow
+def test_paged_splitk_engine_matches_single_split():
+    """Acceptance gate: the paged split-K decode variant emits the same
+    tokens as the single-split kernel (max_len 64 / page 16 -> 4 pages,
+    fan-out 4 = one page per split)."""
+    model, params = tiny_lm()
+    one = LM(model.cfg, model.knobs.with_(use_pallas=True))
+    split = LM(model.cfg, model.knobs.with_(use_pallas=True,
+                                            decode_splits=4))
+    outs = {}
+    for name, m in (("one", one), ("split", split)):
+        eng = ServeEngine(m, params,
+                          ServeConfig(batch_slots=2, max_len=64,
+                                      cache="paged", page_size=16,
+                                      prefill_chunk=16))
+        for r in _shared_prefix_trace(5, shared_len=21, seed=8):
+            eng.submit(Request(r.req_id, r.prompt.copy(),
+                               max_new_tokens=8))
+        outs[name] = {r.req_id: r.output for r in eng.run()}
+    assert outs["split"] == outs["one"]

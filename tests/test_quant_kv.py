@@ -1,0 +1,379 @@
+"""Quantized paged KV cache (int8 / fp8): round-trip error bounds,
+kernel parity against the dequantized jnp oracle (decode, fused prefill,
+split-K), scale pools traveling with pages through CoW and the
+disaggregated handoff, and engine-level identity + memory gates.
+Engine construction helpers live in tests/conftest.py."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import tiny_lm
+
+from repro.kernels.paged_attention import (paged_decode_attention_splitk_tpu,
+                                           paged_decode_attention_tpu,
+                                           paged_prefill_attention_tpu)
+from repro.kernels.ref import (dequantize_ref, paged_decode_attention_ref,
+                               paged_decode_attention_quant_ref,
+                               paged_prefill_attention_ref)
+from repro.models import LM, RuntimeKnobs
+from repro.models.attention import (KV_QUANT_DTYPES, dequantize_kv,
+                                    gather_slot_pages, kv_quant_dtype,
+                                    paged_cache_update_quant,
+                                    paged_decode_attention_xla, quantize_kv)
+from repro.runtime.disagg import transfer_chain
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.serve import Request, ServeConfig, ServeEngine
+
+RNG = np.random.default_rng(23)
+
+_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def arr(*s):
+    return jnp.asarray(RNG.normal(size=s), jnp.float32)
+
+
+def _quant_pools(kp, vp, name):
+    kq, ks = quantize_kv(kp, KV_QUANT_DTYPES[name])
+    vq, vs = quantize_kv(vp, KV_QUANT_DTYPES[name])
+    return kq, ks, vq, vs
+
+
+# ------------------------------------------------------------- round trip
+def _roundtrip_bound(x, name):
+    """Symmetric per-row quantization error bound: int8 rounds to the
+    nearest of 255 levels (half a step = amax/254); fp8 e4m3 keeps a
+    3-bit mantissa (relative error <= 2^-4 of the row max after the
+    power-of-two exponent)."""
+    q, s = quantize_kv(x, KV_QUANT_DTYPES[name])
+    err = jnp.abs(dequantize_kv(q, s) - x.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    bound = amax / (2 * _QMAX[name]) if name == "int8" else amax * 0.0625
+    assert bool(jnp.all(err <= bound + 1e-6)), float(jnp.max(err - bound))
+
+
+@pytest.mark.parametrize("name", sorted(KV_QUANT_DTYPES))
+def test_quantize_roundtrip_bound(name):
+    _roundtrip_bound(10.0 * arr(16, 4, 2, 32), name)
+
+
+@pytest.mark.parametrize("name", sorted(KV_QUANT_DTYPES))
+def test_quantize_zero_rows_are_exact(name):
+    """All-zero rows must dequantize to exactly zero (scale 0, not a
+    0/0): freshly initialized pool rows and null-page writes stay 0."""
+    q, s = quantize_kv(jnp.zeros((3, 5, 2, 16)), KV_QUANT_DTYPES[name])
+    assert float(jnp.max(jnp.abs(dequantize_kv(q, s)))) == 0.0
+    # row max exactly representable -> round trips exactly too
+    x = jnp.full((1, 1, 1, 4), 2.0)
+    q, s = quantize_kv(x, KV_QUANT_DTYPES[name])
+    assert float(jnp.max(jnp.abs(dequantize_kv(q, s) - x))) == 0.0
+
+
+def test_kv_quant_dtype_lookup():
+    assert kv_quant_dtype("") is None
+    assert kv_quant_dtype("int8") == jnp.int8
+    assert kv_quant_dtype("fp8") == jnp.float8_e4m3fn
+    with pytest.raises(KeyError):
+        kv_quant_dtype("int4")
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @pytest.mark.slow
+    @settings(max_examples=50, deadline=None)
+    @given(name=st.sampled_from(sorted(KV_QUANT_DTYPES)),
+           seed=st.integers(0, 10_000),
+           scale=st.floats(1e-3, 1e3),
+           d=st.sampled_from([1, 4, 64]))
+    def test_quantize_roundtrip_bound_hypothesis(name, seed, scale, d):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(scale * rng.normal(size=(4, 3, 2, d)), jnp.float32)
+        _roundtrip_bound(x, name)
+
+
+# ----------------------------------------------------------- kernel parity
+def _paged_case(b, kv, d, page_size, max_pages):
+    n_pages = 1 + b * max_pages + 3
+    kp = arr(n_pages, kv, page_size, d)
+    vp = arr(n_pages, kv, page_size, d)
+    perm = RNG.permutation(np.arange(1, n_pages))[:b * max_pages]
+    return kp, vp, perm.reshape(b, max_pages).astype(np.int32)
+
+
+@pytest.mark.parametrize("name", sorted(KV_QUANT_DTYPES))
+@pytest.mark.parametrize("window", [0, 8])
+def test_quant_decode_kernel_matches_dequant_oracle(name, window):
+    """In-kernel dequantization equals dequantize-then-attend: the fused
+    read must not change logical attention."""
+    b, kv, g, d, ps, mp = 4, 2, 2, 16, 16, 4
+    kp, vp, pt = _paged_case(b, kv, d, ps, mp)
+    kq, ks, vq, vs = _quant_pools(kp, vp, name)
+    q = arr(b, kv * g, 1, d)
+    pos = np.array([-1, 0, 31, 63], np.int32)
+    ref = paged_decode_attention_quant_ref(q, kq, vq, ks, vs, pt, pos,
+                                           window=window)
+    out = paged_decode_attention_tpu(q, kq, vq, jnp.asarray(pt), pos,
+                                     window=window, k_scale=ks, v_scale=vs,
+                                     interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+@pytest.mark.parametrize("name", sorted(KV_QUANT_DTYPES))
+@pytest.mark.parametrize("offset", [0, 16])
+def test_quant_prefill_kernel_matches_dequant_oracle(name, offset):
+    b, kv, g, d, ps, mp, c = 1, 2, 2, 16, 16, 4, 16
+    kp, vp, pt = _paged_case(b, kv, d, ps, mp)
+    kq, ks, vq, vs = _quant_pools(kp, vp, name)
+    q = arr(1, kv * g, c, d)
+    row = jnp.asarray(pt[0])
+    ref = paged_prefill_attention_ref(q, dequantize_ref(kq, ks),
+                                      dequantize_ref(vq, vs), row, offset)
+    out = paged_prefill_attention_tpu(q, kq, vq, row, offset, k_scale=ks,
+                                      v_scale=vs, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+@pytest.mark.parametrize("name", sorted(KV_QUANT_DTYPES))
+@pytest.mark.parametrize("num_splits", [2, 4])
+def test_quant_splitk_kernel_matches_dequant_oracle(name, num_splits):
+    b, kv, g, d, ps, mp = 2, 2, 2, 16, 16, 4
+    kp, vp, pt = _paged_case(b, kv, d, ps, mp)
+    kq, ks, vq, vs = _quant_pools(kp, vp, name)
+    q = arr(b, kv * g, 1, d)
+    pos = np.array([29, -1], np.int32)
+    ref = paged_decode_attention_quant_ref(q, kq, vq, ks, vs, pt, pos)
+    out = paged_decode_attention_splitk_tpu(
+        q, kq, vq, jnp.asarray(pt), pos, num_splits=num_splits,
+        k_scale=ks, v_scale=vs, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+def test_quant_xla_matches_dequant_oracle():
+    b, kv, g, d, ps, mp = 4, 2, 2, 16, 16, 4
+    kp, vp, pt = _paged_case(b, kv, d, ps, mp)
+    kq, ks, vq, vs = _quant_pools(kp, vp, "int8")
+    q = arr(b, kv * g, 1, d)
+    pos = np.array([-1, 0, 31, 63], np.int32)
+    ref = paged_decode_attention_quant_ref(q, kq, vq, ks, vs, pt, pos)
+    out = paged_decode_attention_xla(
+        q.swapaxes(1, 2), kq.swapaxes(1, 2), vq.swapaxes(1, 2), pt, pos,
+        k_scale=ks.swapaxes(1, 2), v_scale=vs.swapaxes(1, 2))
+    assert float(jnp.max(jnp.abs(out.swapaxes(1, 2) - ref))) < 1e-5
+
+
+def test_int8_decode_accuracy_vs_fp32():
+    """Quantization is lossy but bounded: int8 attention outputs stay
+    within 5e-2 of the unquantized fp32 outputs (normalized softmax
+    averages of O(1) values; observed ~1e-2)."""
+    b, kv, g, d, ps, mp = 4, 2, 2, 16, 16, 4
+    kp, vp, pt = _paged_case(b, kv, d, ps, mp)
+    kq, ks, vq, vs = _quant_pools(kp, vp, "int8")
+    q = arr(b, kv * g, 1, d)
+    pos = np.array([5, 17, 31, 63], np.int32)
+    exact = paged_decode_attention_ref(q, kp, vp, pt, pos)
+    out = paged_decode_attention_tpu(q, kq, vq, jnp.asarray(pt), pos,
+                                     k_scale=ks, v_scale=vs, interpret=True)
+    assert float(jnp.max(jnp.abs(out - exact))) < 5e-2
+
+
+# --------------------------------------------------- cache update / layout
+def test_quant_cache_update_writes_pages_and_scales():
+    """The quantized scatter puts the row in the mapped page and its
+    scale in the matching scale-pool position; inactive slots land in
+    the null page; the dequantized row round-trips within bound."""
+    kv, d, ps, n_pages = 2, 16, 8, 6
+    kp = jnp.zeros((n_pages, ps, kv, d), jnp.int8)
+    vp = jnp.zeros((n_pages, ps, kv, d), jnp.int8)
+    ks = jnp.zeros((n_pages, ps, kv, 1))
+    vs = jnp.zeros((n_pages, ps, kv, 1))
+    k_new, v_new = arr(3, 1, kv, d), arr(3, 1, kv, d)
+    pt = np.array([[1, 2], [3, 4], [0, 0]], np.int32)
+    pos = np.array([3, 11, -1], np.int32)  # slot 2 inactive
+    kp2, vp2, ks2, vs2 = paged_cache_update_quant(
+        kp, vp, ks, vs, k_new, v_new, pos, pt, ps)
+    got = dequantize_kv(kp2[4, 3], ks2[4, 3])
+    assert float(jnp.max(jnp.abs(got - k_new[1, 0]))) < \
+        float(jnp.max(jnp.abs(k_new))) / 127
+    assert float(jnp.max(jnp.abs(vs2[1, 3]))) > 0.0  # slot 0 scale landed
+    # untouched pages keep zero scales (and so dequantize to zero)
+    assert float(jnp.sum(jnp.abs(ks2[5]))) == 0.0
+    assert float(jnp.sum(jnp.abs(ks2[2]))) == 0.0
+
+
+def test_quant_model_cache_layout_and_copy_pages():
+    """A kv_quant model allocates int8 pools plus f32 scale pools with
+    the page axis at ndim-4 — the invariant every page-copy/transfer
+    helper keys on — and LM.copy_cache_pages moves page AND scale."""
+    model, _ = tiny_lm()
+    qm = LM(model.cfg, model.knobs.with_(kv_quant="int8"))
+    caches = qm.init_cache_paged(num_pages=5, page_size=8)
+    leafd = caches["stack"]
+    assert leafd["k"].dtype == jnp.int8
+    assert leafd["k_scale"].dtype == jnp.float32
+    assert leafd["k_scale"].shape == leafd["k"].shape[:-1] + (1,)
+    leafd["k"] = leafd["k"].at[:, 2].set(7)
+    leafd["k_scale"] = leafd["k_scale"].at[:, 2].set(0.5)
+    out = jax.jit(qm.copy_cache_pages)(caches, jnp.int32(2), jnp.int32(4))
+    assert int(jnp.min(out["stack"]["k"][:, 4])) == 7
+    assert float(jnp.min(out["stack"]["k_scale"][:, 4])) == 0.5
+    assert float(jnp.max(jnp.abs(out["stack"]["k_scale"][:, 3]))) == 0.0
+
+
+def test_gather_slot_pages_dequantizes_with_scales():
+    kv, d, ps, mp = 2, 16, 8, 2
+    kp, vp, pt = _paged_case(1, kv, d, ps, mp)
+    kpm, vpm = kp.swapaxes(1, 2), vp.swapaxes(1, 2)  # model layout
+    kq, ks = quantize_kv(kpm, jnp.int8)
+    vq, vs = quantize_kv(vpm, jnp.int8)
+    kd, vd = gather_slot_pages(kq, vq, jnp.asarray(pt), jnp.int32(0),
+                               k_scale=ks, v_scale=vs)
+    want = dequantize_kv(kq, ks)[pt[0]].reshape(1, mp * ps, kv, d)
+    assert kd.dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(kd - want))) == 0.0
+
+
+# ------------------------------------------------------------ engine level
+def _reqs(n, max_new=6, seed=3, sampled=False):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, 60, size=18).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(1, 60, size=int(rng.integers(2, 6))) \
+            .astype(np.int32)
+        prompt = np.concatenate([shared, tail]) if i % 2 else tail
+        sp = (SamplingParams(temperature=0.8, top_k=20, seed=7)
+              if sampled and i % 2 else SamplingParams())
+        out.append(Request(i, prompt, max_new_tokens=max_new, sampling=sp))
+    return out
+
+
+def _run(model, params, cfg, reqs):
+    eng = ServeEngine(model, params, cfg)
+    hs = [eng.submit(dataclasses.replace(
+        r, prompt=np.asarray(r.prompt), output=[])) for r in reqs]
+    eng.run()
+    return eng, [h.output for h in hs]
+
+
+_PAGED = dict(batch_slots=2, max_len=64, cache="paged", page_size=8,
+              prefill_chunk=16)
+
+
+@pytest.mark.parametrize("name", sorted(KV_QUANT_DTYPES))
+def test_quant_engine_serves_shared_prefix_trace(name):
+    """int8/fp8 engines drain a shared-prefix trace with prefix hits,
+    balanced pools, and (int8) about half the reserved KV bytes of the
+    f32 baseline — the scale pools cost D=1 of overhead per row."""
+    model, params = tiny_lm()
+    cfg = ServeConfig(**_PAGED, kv_dtype=name)
+    eng, outs = _run(model, params, cfg, _reqs(6))
+    assert all(len(o) == 6 for o in outs)
+    # drained: only prefix-cache refs (== 1) may remain
+    assert not np.any(np.asarray(eng.kv.pool.ref[1:]) > 1)
+    assert eng.kv.stats()["prefix_hits"] > 0
+    base, _ = _run(model, params, ServeConfig(**_PAGED), _reqs(6))
+    ratio = eng.kv_reserved_bytes() / base.kv_reserved_bytes()
+    if name == "int8":  # 4B -> 1B + 4/D scale overhead (D=64: ~0.31)
+        assert ratio < 0.5
+    assert eng.kv_reserved_bytes() < base.kv_reserved_bytes()
+
+
+@pytest.mark.slow  # engine-equality suite: full-suite lane
+def test_quant_engine_pallas_matches_xla_bitwise():
+    """Acceptance gate: in-kernel dequantization (Pallas fused decode +
+    prefill) and the XLA gather path emit identical token streams over
+    the same quantized pools — greedy and seeded-sampled."""
+    model, params = tiny_lm()
+    pallas = LM(model.cfg, model.knobs.with_(use_pallas=True))
+    for sampled in (False, True):
+        reqs = _reqs(6, sampled=sampled)
+        cfg = ServeConfig(**_PAGED, kv_dtype="int8")
+        _, ref = _run(model, params, cfg, reqs)
+        _, out = _run(pallas, params, cfg, reqs)
+        assert out == ref, f"sampled={sampled}"
+
+
+@pytest.mark.slow
+def test_quant_spec_decode_identical_to_plain():
+    """Speculative decode's bitwise contract survives quantization: the
+    multi-token verify writes the same quantized rows + scales the
+    one-token path would."""
+    model, params = tiny_lm()
+    reqs = _reqs(5, max_new=8)
+    _, ref = _run(model, params, ServeConfig(**_PAGED, kv_dtype="int8"),
+                  reqs)
+    _, out = _run(model, params,
+                  ServeConfig(**_PAGED, kv_dtype="int8", draft_k=3), reqs)
+    assert out == ref
+
+
+def test_quant_cow_isolation_with_scales():
+    """Two requests sharing a cached prefix stay isolated after the CoW
+    split: the writer's appended tokens never perturb the sharer's
+    output (scales travel with their pages through the copy)."""
+    model, params = tiny_lm()
+    eng = ServeEngine(model, params, ServeConfig(**_PAGED, kv_dtype="int8"))
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, 60, size=17).astype(np.int32)
+    h0 = eng.submit(Request(0, prompt.copy(), max_new_tokens=6))
+    eng.run()
+    # resubmits hit the prefix cache (matched > 0 -> CoW on last page)
+    h1 = eng.submit(Request(1, prompt.copy(), max_new_tokens=6))
+    h2 = eng.submit(Request(2, np.concatenate(
+        [prompt, rng.integers(1, 60, size=3).astype(np.int32)]),
+        max_new_tokens=6))
+    eng.run()
+    assert eng.kv.stats()["prefix_hits"] >= 2
+    assert h1.output == h0.output  # sharer unperturbed by writer slot
+    # only prefix-cache refs (== 1) may remain after the drain
+    assert not np.any(np.asarray(eng.kv.pool.ref[1:]) > 1)
+
+
+def test_quant_disagg_transfer_refcounts_balance():
+    """Satellite regression: the cross-pool handoff moves a quantized
+    chain — values AND scale pools — without leaking a refcount, and
+    the decode engine finishes from the transferred pages."""
+    model, params = tiny_lm()
+    cfg = ServeConfig(**{**_PAGED, "prefix_cache": False},
+                      kv_dtype="int8")
+    src = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="prefill"))
+    dst = ServeEngine(model, params,
+                      dataclasses.replace(cfg, role="decode"))
+    req = _reqs(2)[1]  # long (shared+tail) prompt -> multi-page chain
+    src.submit(req)
+    for _ in range(10):
+        src.step()
+        if req.output:
+            break
+    assert req.output
+    ck = src.release(req)
+    n = len(ck.pages)
+    assert n > 1
+    assert src.kv.pool.in_use == n
+    assert transfer_chain(src, dst, req)
+    assert src.kv.pool.in_use == 0
+    assert not np.any(np.asarray(src.kv.pool.ref[1:]))
+    assert dst.kv.pool.in_use == n
+    dst.submit(req)
+    dst.run()
+    assert req.done and len(req.output) == req.max_new_tokens
+    assert dst.kv.pool.in_use == 0
+    assert not np.any(np.asarray(dst.kv.pool.ref[1:]))
+
+
+def test_kv_dtype_validation():
+    model, params = tiny_lm()
+    with pytest.raises(ValueError, match="cache='paged'"):
+        ServeEngine(model, params,
+                    ServeConfig(batch_slots=1, max_len=32,
+                                kv_dtype="int8"))
+    with pytest.raises(ValueError, match="int8/fp8"):
+        ServeEngine(model, params,
+                    ServeConfig(batch_slots=1, max_len=32, cache="paged",
+                                kv_dtype="int4"))
